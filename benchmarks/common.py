@@ -1,0 +1,81 @@
+"""Shared benchmark helpers (CPU-scale reduced models; the paper's setup
+scaled to this container — relative orderings are the reproduction target,
+see EXPERIMENTS.md §Throughput)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, CacheConfig, ModelConfig
+from repro.models import init_model
+from repro.serving import Engine, SamplingParams
+
+_PARAM_CACHE: dict = {}
+
+
+def reduced_model(arch: str, seed: int = 0):
+    cfg = ARCHS[arch].reduced()
+    key = (arch, seed)
+    if key not in _PARAM_CACHE:
+        _PARAM_CACHE[key] = init_model(jax.random.PRNGKey(seed), cfg)
+    return cfg, _PARAM_CACHE[key]
+
+
+@dataclass
+class ServeResult:
+    policy: str
+    budget: int
+    page: int
+    throughput_tok_s: float      # decode tokens / decode wall time
+    tpot_ms: float               # mean time per output token
+    total_tokens: int
+    pages_evicted: int
+    steps: int
+
+
+def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
+                      num_requests: int = 4, prompt_len: int = 64,
+                      new_tokens: int = 48, max_batch: int = 4,
+                      seed: int = 0, model=None) -> ServeResult:
+    """Paper Fig.3 setup, scaled: synthetic prompts, concurrent batch,
+    measure decode throughput + TPOT. ``model``: optional (cfg, params)
+    override for custom size ladders."""
+    cfg, params = model if model is not None else reduced_model(arch)
+    ccfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                       dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=max_batch,
+                 max_prompt_len=prompt_len, max_new_tokens=new_tokens,
+                 sampling=SamplingParams(greedy=True), seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(num_requests):
+        n = int(rng.integers(prompt_len // 2, prompt_len))
+        eng.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32))
+    # warm the decode path so compile time stays out of the measurement
+    eng.step()
+    eng.stats.decode_s = 0.0
+    eng.stats.tokens_generated = 0
+    eng.run()
+    s = eng.stats
+    tpot = (s.decode_s / max(s.steps, 1)) * 1000.0
+    return ServeResult(policy=policy, budget=budget, page=page,
+                       throughput_tok_s=s.decode_tok_per_s, tpot_ms=tpot,
+                       total_tokens=s.tokens_generated,
+                       pages_evicted=s.pages_evicted, steps=s.steps)
+
+
+def timeit_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall microseconds per call of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

@@ -1,0 +1,61 @@
+"""Paper Limitation 4 microbenchmark: per-step eviction bookkeeping cost.
+
+Times ONLY the cache-maintenance path (write + policy post_write) per
+policy at steady state, isolating the paper's overhead argument from model
+compute: PagedEviction pays page-scoring once per page_size steps;
+token-per-step baselines pay argmin-over-cache every step; keydiff
+additionally re-reads all cached keys every step."""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_call
+from repro.configs import CacheConfig
+from repro.core import decode_append, get_policy, init_layer_cache
+
+POLICIES = ["full", "paged_eviction", "streaming_llm", "inverse_key_l2",
+            "keydiff"]
+
+
+def run(B: int = 8, KV: int = 2, hd: int = 64, page: int = 16,
+        budget: int = 256, quick: bool = False):
+    steps_to_fill = budget + 2 * page
+    rows = []
+    for polname in POLICIES:
+        pol = get_policy(polname)
+        ccfg = CacheConfig(page_size=page, cache_budget=budget, policy=polname,
+                           dtype="float32")
+        pages = pol.slab_pages(ccfg, steps_to_fill + page)
+        cache = init_layer_cache(B, pages, page, KV, hd, jnp.float32)
+
+        @jax.jit
+        def step(cache, k, v, t):
+            return decode_append(cache, k, v, t, pol, ccfg).cache
+
+        rng = jax.random.PRNGKey(0)
+        # drive to steady state (budget full)
+        for t in range(steps_to_fill):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            cache = step(cache, jax.random.normal(k1, (B, KV, hd)),
+                         jax.random.normal(k2, (B, KV, hd)),
+                         jnp.full((B,), t, jnp.int32))
+        k = jax.random.normal(rng, (B, KV, hd))
+        t = jnp.full((B,), steps_to_fill, jnp.int32)
+        us = timeit_call(step, cache, k, k, t, iters=10 if quick else 30)
+        rows.append((polname, us))
+        print(f"  evict_overhead,{polname},{us:.0f} us/step")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Figure 4 / §5.5: page-size ablation — throughput and accuracy
+across page sizes for each compression method. The paper finds PagedEviction
+keeps its throughput/accuracy balance across page sizes (16/32 best for
+vLLM); here we sweep the reduced-scale equivalents."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.accuracy import eval_policy, train_recall_model
+from benchmarks.common import run_serving_bench
+
+PAGES = (4, 8, 16)
+POLICIES = ["paged_eviction", "streaming_llm", "inverse_key_l2"]
+
+
+def run(arch: str = "llama-3.2-1b", budget: int = 64, quick: bool = False):
+    pages = PAGES[:2] if quick else PAGES
+    rows = []
+    for page in pages:
+        for pol in POLICIES:
+            r = run_serving_bench(arch, policy=pol, budget=budget, page=page,
+                                  new_tokens=8 if quick else 32)
+            rows.append(r)
+            print(f"  pagesize,{arch},{pol},page={page},"
+                  f"{r.throughput_tok_s:.1f} tok/s")
+    # accuracy side (quick: skip re-training by keeping steps small)
+    cfg, params, dcfg, _ = train_recall_model(steps=120 if quick else 300)
+    for page in pages:
+        for pol in POLICIES:
+            acc = eval_policy(cfg, params, dcfg, pol, budget, page=page,
+                              n_batches=2 if quick else 6)
+            print(f"  pagesize_acc,{pol},page={page},{acc:.3f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Aggregate dry-run artifacts into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+the per-(arch x shape x policy) roofline terms + dominant bottleneck. This
+is the source for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+COLS = ["arch", "shape", "mesh", "policy", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful_flops_ratio"]
+
+
+def load_rows(art_dir: str = ART_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def _variant(r: dict) -> str:
+    notes = r.get("notes", "")
+    tags = []
+    if "zero1=True" in notes:
+        tags.append("zero1")
+    if "cache_dtype=int8" in notes:
+        tags.append("int8")
+    return "+".join(tags) or "-"
+
+
+def fmt_row(r: dict) -> str:
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} | "
+            f"{_variant(r)} | "
+            f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"{r['collective_s']:.2e} | **{r['dominant']}** | "
+            f"{r['useful_flops_ratio']:.2f} |")
+
+
+def markdown_table(rows: list[dict]) -> str:
+    head = ("| arch | shape | mesh | policy | variant | compute (s) | "
+            "memory (s) | collective (s) | dominant | useful |\n"
+            "| --- | --- | --- | --- | --- | --- | --- | --- | --- | --- |")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r["mesh"], r["policy"], _variant(r)))
+    return "\n".join([head] + [fmt_row(r) for r in rows])
+
+
+def run(quick: bool = False):
+    rows = load_rows()
+    if not rows:
+        print("  roofline: no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun --all)")
+        return []
+    print(markdown_table(rows))
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"  roofline,artifacts={len(rows)},dominants={doms}")
+    return rows
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

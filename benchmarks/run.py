@@ -1,0 +1,66 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV lines (plus per-benchmark detail).
+Quick mode (default) keeps CPU wall time tractable; --full runs the
+paper-scaled sweeps used for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _section(name):
+    print(f"== {name} ==", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full sweeps (slow); default is quick mode")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (accuracy, eviction_overhead, latency,
+                            page_size_ablation, paper_claims, roofline,
+                            throughput)
+
+    t0 = time.perf_counter()
+    _section("throughput vs budget (paper Fig. 3a-c)")
+    rows = throughput.run(quick=quick)
+    for r in rows:
+        print(f"throughput_{r.policy}_b{r.budget},"
+              f"{1e6 / max(r.throughput_tok_s, 1e-9):.0f},"
+              f"{r.throughput_tok_s:.1f} tok/s")
+
+    _section("TPOT vs model size (paper Fig. 3d)")
+    for tag, pol, r in latency.run(quick=quick):
+        print(f"tpot_{tag}_{pol},{r.tpot_ms * 1000:.0f},{r.tpot_ms:.2f} ms")
+
+    _section("eviction bookkeeping overhead (paper Limitation 4)")
+    for pol, us in eviction_overhead.run(quick=quick):
+        print(f"evict_overhead_{pol},{us:.0f},us/step")
+
+    _section("accuracy vs budget on long-context recall (paper Fig. 2 proxy)")
+    full_acc, results = accuracy.run(quick=quick)
+    print(f"accuracy_full_cache,0,{full_acc:.3f}")
+    for (pol, budget), acc in results.items():
+        print(f"accuracy_{pol}_b{budget},0,{acc:.3f}")
+
+    _section("page-size ablation (paper Fig. 4)")
+    page_size_ablation.run(quick=quick)
+
+    _section("TPU-scale TPOT/throughput claims from dry-runs (paper Fig. 3)")
+    paper_claims.run(quick=quick)
+
+    _section("roofline terms from dry-run artifacts (assignment g)")
+    roofline.run(quick=quick)
+
+    print(f"total_bench_seconds,{(time.perf_counter() - t0) * 1e6:.0f},"
+          f"{time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

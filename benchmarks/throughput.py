@@ -1,0 +1,44 @@
+"""Paper Figure 3 (a-c): throughput vs cache budget per eviction policy.
+
+Paper setup (A100, vLLM, 1024-in/8192-out/64 concurrent) scaled to this
+CPU container (reduced model, 64-in/48-out/4 concurrent). The reproduction
+target is the RELATIVE ordering: PagedEviction ~ StreamingLLM > unstructured
+(inverse_key_l2 / keydiff) and > Full Cache once the context exceeds the
+budget (smaller cache = cheaper attention reads + rarer cache-table work).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import run_serving_bench
+
+POLICIES = ["full", "paged_eviction", "streaming_llm", "inverse_key_l2",
+            "keydiff"]
+
+
+def run(arch: str = "llama-3.2-1b", budgets=(32, 64, 128), page: int = 8,
+        new_tokens: int = 48, quick: bool = False):
+    budgets = budgets[:1] if quick else budgets
+    rows = []
+    for budget in budgets:
+        for pol in POLICIES:
+            if pol == "full" and budget != budgets[0]:
+                continue               # budget-independent
+            r = run_serving_bench(arch, policy=pol, budget=budget, page=page,
+                                  new_tokens=8 if quick else new_tokens)
+            rows.append(r)
+            print(f"  throughput,{arch},{pol},budget={budget},"
+                  f"{r.throughput_tok_s:.1f} tok/s,tpot={r.tpot_ms:.1f}ms")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-3.2-1b")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

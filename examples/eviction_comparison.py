@@ -1,0 +1,62 @@
+"""Side-by-side cache traces for every eviction policy (paper Figs. 1/5/6).
+
+Runs the same decode trace through all five policies and renders each
+cache's page occupancy as ASCII — making the paper's structural argument
+visible: PagedEviction keeps pages uniformly full; StreamingLLM slides;
+unstructured policies fragment.
+
+    PYTHONPATH=src python examples/eviction_comparison.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CacheConfig
+from repro.core import decode_append, get_policy, init_layer_cache
+
+PAGE, BUDGET, STEPS = 8, 32, 72
+B, KV, HD = 1, 2, 16
+
+
+def trace(policy_name):
+    pol = get_policy(policy_name)
+    cfg = CacheConfig(page_size=PAGE, cache_budget=BUDGET, policy=policy_name,
+                      dtype="float32")
+    cache = init_layer_cache(B, pol.slab_pages(cfg, STEPS), PAGE, KV, HD,
+                             jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    evictions = 0
+    for t in range(STEPS):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        out = decode_append(cache, jax.random.normal(k1, (B, KV, HD)),
+                            jax.random.normal(k2, (B, KV, HD)),
+                            jnp.full((B,), t), pol, cfg)
+        cache = out.cache
+        evictions += int(out.pages_evicted.any()) + int(out.tokens_evicted.any())
+    return cache, evictions
+
+
+def render(cache):
+    """One char per slot: digit=page occupancy bucket, .=hole, |=page edge."""
+    rows = []
+    valid = np.asarray(cache.valid_mask())[0]
+    for p in range(cache.num_pages):
+        cells = "".join("#" if v else "." for v in valid[p])
+        rows.append(cells)
+    return " | ".join(rows)
+
+
+print(f"page={PAGE} budget={BUDGET} decode_steps={STEPS}\n")
+for pol in ["full", "paged_eviction", "streaming_llm", "inverse_key_l2",
+            "keydiff"]:
+    cache, ev = trace(pol)
+    live = int(cache.total_valid()[0])
+    tpp = np.asarray(cache.tokens_per_page())[0]
+    frag = sum(1 for i, n in enumerate(tpp)
+               if i != int(cache.cur_page[0]) and 0 < n < PAGE)
+    print(f"{pol:16s} live={live:3d} eviction_ops={ev:3d} "
+          f"fragmented_pages={frag}")
+    print(f"  {render(cache)}\n")
+
+print("PagedEviction: eviction ops ~ steps/page_size, zero fragmentation.")
+print("Token-per-step baselines: eviction ops ~ steps, holes across pages.")

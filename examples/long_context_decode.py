@@ -1,0 +1,65 @@
+"""Long-context decode with a budget-capped cache — the long_500k story at
+CPU scale.
+
+Decodes far past the cache budget: the paged cache stays at a constant
+~budget tokens while the *position* stream keeps growing (RoPE at true
+positions, masks against true positions). This is exactly how the full
+long_500k dry-run shape works: a dense model decodes at position 524288
+with a 4096-token cache; here a reduced model decodes 600 tokens on a
+64-token cache.
+
+    PYTHONPATH=src python examples/long_context_decode.py [--policy ...]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CacheConfig, get_arch
+from repro.core import get_policy
+from repro.models import decode_step, forward_prefill, init_model, make_inputs
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--policy", default="paged_eviction")
+ap.add_argument("--budget", type=int, default=64)
+ap.add_argument("--steps", type=int, default=600)
+ap.add_argument("--arch", default="qwen2.5-3b")
+args = ap.parse_args()
+
+cfg = get_arch(args.arch).reduced()
+params = init_model(jax.random.PRNGKey(0), cfg)
+ccfg = CacheConfig(page_size=8, cache_budget=args.budget, policy=args.policy,
+                   dtype="float32")
+policy = get_policy(ccfg.policy)
+
+prompt = make_inputs(jax.random.PRNGKey(1), cfg, 1, 96)["tokens"]
+# total_seq_hint bounds the slab: with an eviction policy it is
+# budget-capped regardless of how far we decode
+logits, cache = forward_prefill(params, cfg, prompt, policy, ccfg,
+                                total_seq_hint=96 + args.steps)
+kv0 = jax.tree.map(lambda a: a[0], cache.pattern[0].kv)
+slab_tokens = kv0.num_pages * kv0.page_size
+print(f"slab: {kv0.num_pages} pages = {slab_tokens} token slots "
+      f"(decoding {args.steps} tokens => context grows to "
+      f"{96 + args.steps})")
+
+step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c, policy, ccfg))
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+t0 = time.perf_counter()
+for i in range(args.steps):
+    logits, cache = step(params, tok, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    if (i + 1) % 150 == 0:
+        kv = jax.tree.map(lambda a: a[0], cache.pattern[0].kv)
+        live = int(kv.total_valid()[0])
+        oldest = int(jnp.min(jnp.where(kv.pos >= 0, kv.pos, 10**9)))
+        print(f"step {i + 1:4d}: position {int(cache.cur_pos[0]):4d}, "
+              f"live tokens {live:3d} (budget {args.budget}), "
+              f"oldest retained position {oldest}")
+dt = time.perf_counter() - t0
+assert bool(jnp.isfinite(logits).all())
+print(f"decoded {args.steps} tokens in {dt:.1f}s "
+      f"({args.steps / dt:.1f} tok/s) — cache stayed O(budget) while the "
+      f"context grew {(96 + args.steps) / slab_tokens:.1f}x past the slab.")

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's technique in ~40 lines.
+
+Builds a reduced qwen2.5 model, prefills a prompt under a tight cache
+budget with PagedEviction (Alg. 2), decodes a few tokens with block-wise
+eviction (Alg. 3), and prints what happened to the cache.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import CacheConfig, get_arch
+from repro.core import get_policy
+from repro.models import decode_step, forward_prefill, init_model, make_inputs
+
+cfg = get_arch("qwen2.5-3b").reduced()
+params = init_model(jax.random.PRNGKey(0), cfg)
+
+# the paper's knobs: page size B and cache budget C
+ccfg = CacheConfig(page_size=8, cache_budget=64, policy="paged_eviction",
+                   dtype="float32")
+policy = get_policy(ccfg.policy)
+
+# a 96-token prompt: prefill compresses it to the 64-token budget BEFORE
+# paging (token-level, Alg. 2)
+prompt = make_inputs(jax.random.PRNGKey(1), cfg, batch=1, seq_len=96)["tokens"]
+logits, cache = forward_prefill(params, cfg, prompt, policy, ccfg,
+                                total_seq_hint=128)
+
+# pattern-slot caches are stacked over layer repetitions: slice layer 0
+layer0 = lambda c: jax.tree.map(lambda a: a[0], c.pattern[0].kv)
+kv = layer0(cache)
+print(f"prompt tokens : {prompt.shape[1]}")
+print(f"cache budget  : {ccfg.cache_budget} tokens "
+      f"({ccfg.budget_pages} pages of {ccfg.page_size})")
+print(f"after prefill : {int(kv.total_valid()[0])} tokens live "
+      f"(evicted {prompt.shape[1] - int(kv.total_valid()[0])})")
+
+# decode: a whole page is evicted only when the newest page fills (Alg. 3)
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+for step in range(20):
+    logits, cache = decode_step(params, cfg, tok, cache, policy, ccfg)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    kv = layer0(cache)
+    tpp = np.asarray(kv.tokens_per_page())[0]
+    if (step + 1) % 8 == 0:
+        print(f"decode step {step + 1:2d}: live={int(kv.total_valid()[0]):3d} "
+              f"pages={np.count_nonzero(tpp):2d} "
+              f"occupancy={sorted(tpp[tpp > 0].tolist(), reverse=True)}")
+
+print("note: every non-working page is exactly full — the paper's "
+      "block-structure invariant.")

@@ -1,0 +1,3 @@
+"""PagedEviction on TPU: paged KV caching with structured block-wise
+eviction (Chitty-Venkata et al., 2025) as a production JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,82 @@
+"""Config registry: 10 assigned architectures + the paper's own Llama trio,
+4 assigned input shapes, and the paper's cache/eviction knobs."""
+from repro.configs.base import (
+    CacheConfig,
+    LayerSpec,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+from repro.configs.qwen2_5_3b import CONFIG as QWEN2_5_3B
+from repro.configs.chameleon_34b import CONFIG as CHAMELEON_34B
+from repro.configs.stablelm_3b import CONFIG as STABLELM_3B
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.mistral_nemo_12b import CONFIG as MISTRAL_NEMO_12B
+from repro.configs.jamba_1_5_large import CONFIG as JAMBA_1_5_LARGE
+from repro.configs.gemma3_27b import CONFIG as GEMMA3_27B
+from repro.configs.mixtral_8x7b import CONFIG as MIXTRAL_8X7B
+from repro.configs.xlstm_1_3b import CONFIG as XLSTM_1_3B
+from repro.configs.musicgen_medium import CONFIG as MUSICGEN_MEDIUM
+from repro.configs.llama3 import LLAMA_3_1_8B, LLAMA_3_2_1B, LLAMA_3_2_3B
+
+# The 10 assigned architectures (``--arch <id>``).
+ASSIGNED_ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        QWEN2_5_3B,
+        CHAMELEON_34B,
+        STABLELM_3B,
+        MIXTRAL_8X22B,
+        MISTRAL_NEMO_12B,
+        JAMBA_1_5_LARGE,
+        GEMMA3_27B,
+        MIXTRAL_8X7B,
+        XLSTM_1_3B,
+        MUSICGEN_MEDIUM,
+    )
+}
+
+# Paper's own evaluation models (LongBench / throughput experiments).
+PAPER_ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in (LLAMA_3_2_1B, LLAMA_3_2_3B, LLAMA_3_1_8B)
+}
+
+ARCHS: dict[str, ModelConfig] = {**ASSIGNED_ARCHS, **PAPER_ARCHS}
+
+
+def get_arch(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)}") from None
+
+
+def get_shape(name: str) -> ShapeConfig:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown shape {name!r}; available: {sorted(SHAPES)}") from None
+
+
+__all__ = [
+    "ARCHS",
+    "ASSIGNED_ARCHS",
+    "PAPER_ARCHS",
+    "SHAPES",
+    "CacheConfig",
+    "LayerSpec",
+    "ModelConfig",
+    "ShapeConfig",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "get_arch",
+    "get_shape",
+]

@@ -1,0 +1,19 @@
+"""mistral-nemo-12b [dense] — GQA, 128k context, head_dim 128 (< d_model/H).
+[hf:mistralai/Mistral-Nemo-Base-2407]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    arch_type="dense",
+    source="hf:mistralai/Mistral-Nemo-Base-2407",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    act="silu",
+)

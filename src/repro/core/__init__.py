@@ -1,0 +1,34 @@
+"""PagedEviction core: paged KV cache + structured block-wise eviction."""
+from repro.core.paged_cache import (
+    PagedLayerCache,
+    init_layer_cache,
+    write_token,
+    write_prompt_pages,
+    evict_page,
+    evict_token,
+    find_free_page,
+    start_new_page,
+    to_contiguous,
+)
+from repro.core.policies import (
+    POLICIES,
+    EvictionOutcome,
+    EvictionPolicy,
+    FullCache,
+    InverseKeyL2,
+    KeyDiff,
+    PagedEviction,
+    StreamingLLM,
+    get_policy,
+)
+from repro.core.prefill import compress_and_page
+from repro.core.decode import decode_append
+from repro.core import importance
+
+__all__ = [
+    "PagedLayerCache", "init_layer_cache", "write_token", "write_prompt_pages",
+    "evict_page", "evict_token", "find_free_page", "start_new_page",
+    "to_contiguous", "POLICIES", "EvictionOutcome", "EvictionPolicy",
+    "FullCache", "InverseKeyL2", "KeyDiff", "PagedEviction", "StreamingLLM",
+    "get_policy", "compress_and_page", "decode_append", "importance",
+]

@@ -1,0 +1,28 @@
+"""Paper Algorithm 3 — decode-phase block-wise compression.
+
+One call per generated token per layer: append K/V to the write head, then
+let the policy do its bookkeeping (page rollover; PagedEviction evicts an
+entire page only when the newest page just became full; token-level
+baselines evict one token per step — reproducing the paper's overhead
+asymmetry by construction).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import CacheConfig
+from repro.core.paged_cache import PagedLayerCache, write_token
+from repro.core.policies import EvictionOutcome, EvictionPolicy
+
+
+def decode_append(cache: PagedLayerCache, k_tok, v_tok, pos_tok,
+                  policy: EvictionPolicy, cfg: CacheConfig,
+                  active=None) -> EvictionOutcome:
+    """Append one token per request and run the policy's eviction hook.
+
+    k_tok, v_tok: (B, KV, hd); pos_tok: (B,) int32.
+    Returns the updated cache plus eviction telemetry.
+    """
+    score = policy.write_score(k_tok, v_tok, pos_tok)
+    cache = write_token(cache, k_tok, v_tok, pos_tok, score, active=active)
+    return policy.post_write(cache, cfg, active=active)

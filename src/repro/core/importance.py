@@ -1,0 +1,79 @@
+"""Token / block importance proxies (paper §4.1, Algorithm 1).
+
+All scores follow the convention **higher = more important = keep**; the
+eviction argmin removes the least important token/page.
+
+The paper's proxy:  S_i = ||V_i||_2 / ||K_i||_2
+  - ||V_i|| large  -> the token carries much content into the output.
+  - ||K_i|| small  -> (Devoto et al. 2024) inversely correlated with the
+    token's cumulative attention weight, so 1/||K_i|| is a cheap stand-in
+    for attention mass.
+Computed from static K/V states only — never needs the attention matrix,
+hence compatible with fused/flash kernels (paper Limitation 3).
+
+Scores are aggregated over KV heads (mean) so eviction decisions are
+uniform per layer, keeping one block table per (request, layer) exactly as
+vLLM does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+def _norms(x):
+    """L2 norm over head_dim. x: (..., KV, hd) -> (...,) mean over KV heads."""
+    n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1)   # (..., KV)
+    return jnp.mean(n, axis=-1)
+
+
+def vk_ratio_score(k, v):
+    """Paper Alg.1 token importance: mean_h(||V||) / mean_h(||K||).
+
+    k, v: (..., KV, hd)  ->  (...,) f32.
+    """
+    return _norms(v) / jnp.maximum(_norms(k), _EPS)
+
+
+def inverse_key_l2_score(k, v=None):
+    """Devoto et al. 2024 baseline: evict tokens with *high* key L2 norm,
+    i.e. importance = -||K||. (..., KV, hd) -> (...,)."""
+    del v
+    return -_norms(k)
+
+
+def keydiff_score(k, key_mean):
+    """KeyDiff (Park et al. 2025) baseline: evict tokens whose keys are most
+    similar to the mean key direction (least diverse). importance =
+    -cos(k_i, k_mean), averaged over KV heads.
+
+    k: (..., KV, hd); key_mean: broadcastable (..., KV, hd) mean key.
+    """
+    kf = k.astype(jnp.float32)
+    mf = key_mean.astype(jnp.float32)
+    num = jnp.sum(kf * mf, axis=-1)
+    den = jnp.maximum(jnp.linalg.norm(kf, axis=-1) * jnp.linalg.norm(mf, axis=-1), _EPS)
+    cos = num / den                                        # (..., KV)
+    return -jnp.mean(cos, axis=-1)
+
+
+def recency_score(positions):
+    """StreamingLLM ordering: newer = more important. positions: (...)."""
+    return positions.astype(jnp.float32)
+
+
+def block_scores_from_token_scores(token_scores, valid, page_size: int):
+    """Paper Alg.1 block mode: S_j = mean_{i in block j} S_i.
+
+    token_scores: (..., S) with S % page_size == 0; valid: same-shape bool.
+    Returns (..., S // page_size); empty blocks -> +inf (never evicted first).
+    """
+    *lead, S = token_scores.shape
+    assert S % page_size == 0
+    ts = token_scores.reshape(*lead, S // page_size, page_size)
+    vm = valid.reshape(*lead, S // page_size, page_size)
+    cnt = jnp.sum(vm, axis=-1)
+    ssum = jnp.sum(jnp.where(vm, ts, 0.0), axis=-1)
+    return jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), jnp.inf)

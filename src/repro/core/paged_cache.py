@@ -1,0 +1,255 @@
+"""Functional paged KV cache — the TPU/JAX analogue of vLLM's block pool.
+
+Layout (per attention layer):
+    k, v   : (B, P, page, KV, hd)   physical page slab per request
+    pos    : (B, P, page) int32     original token position; -1 == invalid
+    score  : (B, P, page) float32   per-token policy score (higher == keep)
+    cur_page, cur_off : (B,) int32  write head (page slot, offset)
+
+Under an eviction policy with budget C and page size Bp, P is statically
+``C/Bp + 1`` — the budget makes the working set a *static* shape, which is
+exactly what XLA wants (vLLM needs a dynamic allocator for the same thing;
+see DESIGN.md §2). Under ``full`` policy P covers the whole sequence.
+
+Evicting a page == zeroing its validity; the physical slot is then reused
+by the next page of tokens. No data movement, ever (the paper's point).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class PagedLayerCache(NamedTuple):
+    k: jax.Array          # (B, P, page, KV, hd) — bf16/f32, or int8 (quantized)
+    v: jax.Array          # (B, P, page, KV, hd)
+    pos: jax.Array        # (B, P, page) int32, -1 invalid
+    score: jax.Array      # (B, P, page) f32, -inf invalid
+    cur_page: jax.Array   # (B,) int32
+    cur_off: jax.Array    # (B,) int32
+    # int8 mode (beyond-paper: the quantized-KV composition the paper cites
+    # as future work): absmax scale per (token, head); None when not quantized
+    k_scale: jax.Array | None = None   # (B, P, page, KV) f32
+    v_scale: jax.Array | None = None   # (B, P, page, KV) f32
+
+    # ----------------------------------------------------------- derived
+    @property
+    def batch(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+    def valid_mask(self) -> jax.Array:
+        """(B, P, page) bool — which cache slots hold live tokens."""
+        return self.pos >= 0
+
+    def tokens_per_page(self) -> jax.Array:
+        """(B, P) int32 — live tokens in each page."""
+        return jnp.sum(self.valid_mask(), axis=-1).astype(jnp.int32)
+
+    def total_valid(self) -> jax.Array:
+        """(B,) int32 — live tokens per request."""
+        return jnp.sum(self.valid_mask(), axis=(1, 2)).astype(jnp.int32)
+
+    def page_scores(self) -> jax.Array:
+        """(B, P) f32 — mean token score per page (paper Alg. 1, block mode).
+        Pages with no valid tokens score +inf (never the eviction argmin)."""
+        valid = self.valid_mask()
+        cnt = jnp.sum(valid, axis=-1)
+        ssum = jnp.sum(jnp.where(valid, self.score, 0.0), axis=-1)
+        return jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), jnp.inf)
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    def k_dequant(self) -> jax.Array:
+        """K slab in f32/compute dtype (identity when not quantized)."""
+        if not self.quantized:
+            return self.k
+        return self.k.astype(jnp.float32) * (self.k_scale / 127.0)[..., None]
+
+    def v_dequant(self) -> jax.Array:
+        if not self.quantized:
+            return self.v
+        return self.v.astype(jnp.float32) * (self.v_scale / 127.0)[..., None]
+
+
+def quantize_absmax(x, axis: int = -1):
+    """x: (..., hd) -> (int8 values, (...,) f32 absmax scales)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=axis)
+    q = jnp.round(xf / jnp.maximum(scale, 1e-8)[..., None] * 127.0)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def init_layer_cache(batch: int, num_pages: int, page_size: int,
+                     num_kv_heads: int, head_dim: int, dtype) -> PagedLayerCache:
+    quantized = dtype in ("int8", jnp.int8)
+    dt = jnp.int8 if quantized else dtype
+    shape = (batch, num_pages, page_size, num_kv_heads, head_dim)
+    sshape = (batch, num_pages, page_size, num_kv_heads)
+    return PagedLayerCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        pos=jnp.full((batch, num_pages, page_size), -1, jnp.int32),
+        score=jnp.full((batch, num_pages, page_size), -jnp.inf, jnp.float32),
+        cur_page=jnp.zeros((batch,), jnp.int32),
+        cur_off=jnp.zeros((batch,), jnp.int32),
+        k_scale=jnp.zeros(sshape, jnp.float32) if quantized else None,
+        v_scale=jnp.zeros(sshape, jnp.float32) if quantized else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# writes
+# ---------------------------------------------------------------------------
+
+def write_token(cache: PagedLayerCache, k_tok, v_tok, pos_tok, score_tok,
+                active=None) -> PagedLayerCache:
+    """Append one token per request at the write head.
+
+    k_tok, v_tok: (B, KV, hd); pos_tok: (B,) int32; score_tok: (B,) f32.
+    ``active``: optional (B,) bool — requests not active are left untouched
+    (continuous batching: finished / empty slots).
+    Caller must ensure cur_off < page_size (policies roll the page over).
+    """
+    b = jnp.arange(cache.batch)
+    if active is None:
+        active = jnp.ones((cache.batch,), bool)
+    p, o = cache.cur_page, cache.cur_off
+
+    def upd(dst, val):
+        cur = dst[b, p, o]
+        return dst.at[b, p, o].set(jnp.where(
+            active.reshape((-1,) + (1,) * (val.ndim - 1)), val.astype(dst.dtype), cur))
+
+    if cache.quantized:
+        kq, ks = quantize_absmax(k_tok)
+        vq, vs = quantize_absmax(v_tok)
+        k = upd(cache.k, kq)
+        v = upd(cache.v, vq)
+        cache = cache._replace(k_scale=upd(cache.k_scale, ks),
+                               v_scale=upd(cache.v_scale, vs))
+    else:
+        k = upd(cache.k, k_tok)
+        v = upd(cache.v, v_tok)
+    pos = cache.pos.at[b, p, o].set(
+        jnp.where(active, pos_tok.astype(jnp.int32), cache.pos[b, p, o]))
+    score = cache.score.at[b, p, o].set(
+        jnp.where(active, score_tok.astype(jnp.float32), cache.score[b, p, o]))
+    off = jnp.where(active, o + 1, o)
+    return cache._replace(k=k, v=v, pos=pos, score=score, cur_off=off)
+
+
+def write_prompt_pages(cache: PagedLayerCache, k_sel, v_sel, pos_sel, score_sel,
+                       ) -> PagedLayerCache:
+    """Bulk-write C selected prompt tokens (already compressed by the prefill
+    policy) into pages [0 .. C/page). C must be a multiple of page_size.
+
+    k_sel, v_sel: (B, C, KV, hd); pos_sel: (B, C) (-1 = padding/invalid);
+    score_sel: (B, C).
+    """
+    B, C = pos_sel.shape
+    page = cache.page_size
+    assert C % page == 0, (C, page)
+    n = C // page
+    assert n <= cache.num_pages, (n, cache.num_pages)
+    KV, hd = k_sel.shape[2], k_sel.shape[3]
+
+    if cache.quantized:
+        kq, ks = quantize_absmax(k_sel)
+        vq, vs = quantize_absmax(v_sel)
+        k = cache.k.at[:, :n].set(kq.reshape(B, n, page, KV, hd))
+        v = cache.v.at[:, :n].set(vq.reshape(B, n, page, KV, hd))
+        cache = cache._replace(
+            k_scale=cache.k_scale.at[:, :n].set(ks.reshape(B, n, page, KV)),
+            v_scale=cache.v_scale.at[:, :n].set(vs.reshape(B, n, page, KV)))
+    else:
+        k = cache.k.at[:, :n].set(
+            k_sel.reshape(B, n, page, KV, hd).astype(cache.k.dtype))
+        v = cache.v.at[:, :n].set(
+            v_sel.reshape(B, n, page, KV, hd).astype(cache.v.dtype))
+    pos = cache.pos.at[:, :n].set(pos_sel.reshape(B, n, page).astype(jnp.int32))
+    score = cache.score.at[:, :n].set(
+        jnp.where(pos_sel.reshape(B, n, page) >= 0,
+                  score_sel.reshape(B, n, page).astype(jnp.float32), -jnp.inf))
+    return cache._replace(
+        k=k, v=v, pos=pos, score=score,
+        cur_page=jnp.full((B,), n, jnp.int32),
+        cur_off=jnp.zeros((B,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# page-level operations (used by eviction policies)
+# ---------------------------------------------------------------------------
+
+def evict_page(cache: PagedLayerCache, page_idx, enable=None) -> PagedLayerCache:
+    """Invalidate an entire page per request. page_idx: (B,) int32.
+    ``enable``: (B,) bool — rows where eviction actually happens."""
+    B = cache.batch
+    b = jnp.arange(B)
+    if enable is None:
+        enable = jnp.ones((B,), bool)
+    pos_rows = jnp.where(enable[:, None], -1, cache.pos[b, page_idx])
+    score_rows = jnp.where(enable[:, None], -jnp.inf, cache.score[b, page_idx])
+    return cache._replace(pos=cache.pos.at[b, page_idx].set(pos_rows),
+                          score=cache.score.at[b, page_idx].set(score_rows))
+
+
+def evict_token(cache: PagedLayerCache, flat_idx, enable=None) -> PagedLayerCache:
+    """Invalidate a single token per request addressed by flattened (P*page)
+    index. flat_idx: (B,) int32."""
+    B, P, page = cache.pos.shape
+    b = jnp.arange(B)
+    if enable is None:
+        enable = jnp.ones((B,), bool)
+    pi, oi = flat_idx // page, flat_idx % page
+    pos = cache.pos.at[b, pi, oi].set(
+        jnp.where(enable, -1, cache.pos[b, pi, oi]))
+    score = cache.score.at[b, pi, oi].set(
+        jnp.where(enable, -jnp.inf, cache.score[b, pi, oi]))
+    return cache._replace(pos=pos, score=score)
+
+
+def find_free_page(cache: PagedLayerCache) -> tuple[jax.Array, jax.Array]:
+    """(B,) index of a fully-empty page slot + (B,) bool whether one exists."""
+    empty = cache.tokens_per_page() == 0                 # (B, P)
+    idx = jnp.argmax(empty, axis=-1).astype(jnp.int32)
+    exists = jnp.any(empty, axis=-1)
+    return idx, exists
+
+
+def start_new_page(cache: PagedLayerCache, slot, enable=None) -> PagedLayerCache:
+    """Move the write head to ``slot`` (must be empty) and reset the offset."""
+    if enable is None:
+        enable = jnp.ones((cache.batch,), bool)
+    return cache._replace(
+        cur_page=jnp.where(enable, slot.astype(jnp.int32), cache.cur_page),
+        cur_off=jnp.where(enable, 0, cache.cur_off),
+    )
+
+
+# ---------------------------------------------------------------------------
+# gather to contiguous (tests / reference paths)
+# ---------------------------------------------------------------------------
+
+def to_contiguous(cache: PagedLayerCache):
+    """Return (k, v, pos, mask) flattened over pages: (B, P*page, KV, hd),
+    dequantized if needed. Order is physical, not logical — attention is
+    permutation-invariant given correct positions, which tests exploit."""
+    B, P, page, KV, hd = cache.k.shape
+    return (cache.k_dequant().reshape(B, P * page, KV, hd),
+            cache.v_dequant().reshape(B, P * page, KV, hd),
+            cache.pos.reshape(B, P * page),
+            cache.valid_mask().reshape(B, P * page))

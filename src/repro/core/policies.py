@@ -1,0 +1,322 @@
+"""Eviction policies (the paper's technique + all its baselines).
+
+Every policy is a stateless, hashable strategy object with three hooks:
+
+  write_score(k_tok, v_tok, pos)        score stored with each written token
+  prefill_keep(k, v, positions, valid)  paper Alg.2 — token-level prompt
+                                        compression to the budget, *before*
+                                        paging (indices in position order)
+  post_write(cache, cfg, active)        paper Alg.3 — decode-time bookkeeping
+                                        after each appended token: page
+                                        rollover, eviction, block-table update
+
+Policies:
+  paged_eviction   the paper: structured block-wise eviction at page-full
+                   boundaries using S = ||V||/||K|| page means
+  full             no eviction (slab sized to the sequence)
+  streaming_llm    sinks + sliding window; one token evicted per step
+  inverse_key_l2   unstructured: evict highest ||K|| token per step
+  keydiff          unstructured: evict least-diverse key per step (global
+                   cosine-vs-mean recomputed each step — deliberately costly,
+                   reproducing the paper's overhead comparison)
+
+All hooks are shape-static and jit/vmap/scan-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CacheConfig
+from repro.core import importance
+from repro.core.paged_cache import (
+    PagedLayerCache,
+    evict_page,
+    evict_token,
+    find_free_page,
+    start_new_page,
+)
+
+
+class EvictionOutcome(NamedTuple):
+    cache: PagedLayerCache
+    pages_evicted: jax.Array    # (B,) bool — a full page was evicted
+    tokens_evicted: jax.Array   # (B,) bool — a single token was evicted
+    forced_evictions: jax.Array  # (B,) bool — fragmentation forced a page out
+
+
+def _no_evict(cache):
+    B = cache.batch
+    false = jnp.zeros((B,), bool)
+    return false, false
+
+
+def _rollover_to_free_page(cache: PagedLayerCache, need):
+    """Where ``need``, move the write head to an empty slot; if none exists
+    (unstructured fragmentation) force-evict the fullest-but-not-current page
+    with the fewest valid tokens."""
+    slot, exists = find_free_page(cache)
+    must_force = need & ~exists
+    # force-evict the page with fewest (but >0) valid tokens, never the
+    # current write page
+    tpp = cache.tokens_per_page().astype(jnp.float32)     # (B, P)
+    B, P = tpp.shape
+    cur_onehot = jax.nn.one_hot(cache.cur_page, P, dtype=bool)
+    cand = jnp.where((tpp > 0) & ~cur_onehot, tpp, jnp.inf)
+    victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+    cache = evict_page(cache, victim, enable=must_force)
+    slot2, _ = find_free_page(cache)
+    slot = jnp.where(must_force, slot2, slot)
+    cache = start_new_page(cache, slot, enable=need)
+    return cache, must_force
+
+
+class EvictionPolicy:
+    name: str = "base"
+    structured: bool = True
+
+    # --- slab sizing --------------------------------------------------------
+    def _round_slab(self, cfg: CacheConfig, pages: int) -> int:
+        m = max(cfg.slab_multiple, 1)
+        return -(-pages // m) * m
+
+    def slab_pages(self, cfg: CacheConfig, seq_len: int) -> int:
+        total = -(-seq_len // cfg.page_size)
+        return self._round_slab(cfg, min(total, cfg.budget_pages + 1))
+
+    # --- scores -------------------------------------------------------------
+    def write_score(self, k_tok, v_tok, pos_tok):
+        """k_tok, v_tok: (B, KV, hd) -> (B,) f32."""
+        raise NotImplementedError
+
+    def prefill_scores(self, k, v, positions):
+        """k, v: (B, S, KV, hd); positions (B, S) -> (B, S) f32."""
+        raise NotImplementedError
+
+    # --- Alg.2: prefill compression ------------------------------------------
+    def prefill_keep(self, k, v, positions, valid, cfg: CacheConfig):
+        """Select ``keep = min(budget, S_pad)`` tokens. Returns
+        (indices (B, keep) in ascending position order, scores (B, S))."""
+        B, S = positions.shape
+        keep = min(cfg.cache_budget, S)
+        scores = self.prefill_scores(k, v, positions)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        _, idx = jax.lax.top_k(scores, keep)               # (B, keep)
+        idx = jnp.sort(idx, axis=-1)                       # restore order
+        return idx, scores
+
+    # --- Alg.3: decode bookkeeping -------------------------------------------
+    def post_write(self, cache: PagedLayerCache, cfg: CacheConfig,
+                   active=None) -> EvictionOutcome:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ misc
+    def __hash__(self):
+        return hash(self.name)
+
+    def __eq__(self, other):
+        return type(self) is type(other)
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+# ---------------------------------------------------------------------------
+# Full cache (no eviction)
+# ---------------------------------------------------------------------------
+
+class FullCache(EvictionPolicy):
+    name = "full"
+    structured = True
+
+    def slab_pages(self, cfg, seq_len):
+        return self._round_slab(cfg, -(-seq_len // cfg.page_size))
+
+    def write_score(self, k_tok, v_tok, pos_tok):
+        return jnp.zeros(k_tok.shape[0], jnp.float32)
+
+    def prefill_scores(self, k, v, positions):
+        # recency: irrelevant when nothing is dropped; for windowed layers
+        # the slab-capacity cap (compress_and_page) then keeps the newest
+        return importance.recency_score(positions)
+
+    def prefill_keep(self, k, v, positions, valid, cfg):
+        B, S = positions.shape
+        idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return idx, jnp.where(valid, self.prefill_scores(k, v, positions),
+                              -jnp.inf)
+
+    def post_write(self, cache, cfg, active=None):
+        if active is None:
+            active = jnp.ones((cache.batch,), bool)
+        need = active & (cache.cur_off >= cache.page_size)
+        nxt = jnp.minimum(cache.cur_page + 1, cache.num_pages - 1)
+        cache = start_new_page(cache, nxt, enable=need)
+        t, f = _no_evict(cache)
+        return EvictionOutcome(cache, t, t, f)
+
+
+# ---------------------------------------------------------------------------
+# PagedEviction (the paper)
+# ---------------------------------------------------------------------------
+
+class PagedEviction(EvictionPolicy):
+    """Structured block-wise eviction (paper Alg. 1-3)."""
+    name = "paged_eviction"
+    structured = True
+
+    def write_score(self, k_tok, v_tok, pos_tok):
+        return importance.vk_ratio_score(k_tok, v_tok)
+
+    def prefill_scores(self, k, v, positions):
+        return importance.vk_ratio_score(k, v)
+
+    def post_write(self, cache, cfg, active=None):
+        if active is None:
+            active = jnp.ones((cache.batch,), bool)
+        page_full = active & (cache.cur_off >= cache.page_size)
+        over = cache.total_valid() > cfg.cache_budget
+        do_evict = page_full & over
+        # page score = mean ||V||/||K|| over the page (Alg.1 block mode);
+        # only *full* pages compete (the working page is the one just filled,
+        # already full; under-filled pages only exist transiently)
+        pscores = cache.page_scores()                      # (B, P)
+        full_pages = cache.tokens_per_page() >= cache.page_size
+        if cfg.protect_recent:
+            B, P = pscores.shape
+            cur = jax.nn.one_hot(cache.cur_page, P, dtype=bool)
+            full_pages &= ~cur
+        cand = jnp.where(full_pages, pscores, jnp.inf)
+        victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+        cache = evict_page(cache, victim, enable=do_evict)
+        cache, forced = _rollover_to_free_page(cache, page_full)
+        return EvictionOutcome(cache, do_evict,
+                               jnp.zeros((cache.batch,), bool), forced)
+
+
+# ---------------------------------------------------------------------------
+# StreamingLLM (sinks + sliding window; token-per-step)
+# ---------------------------------------------------------------------------
+
+class StreamingLLM(EvictionPolicy):
+    name = "streaming_llm"
+    structured = True  # paper classifies it as structured (within-block order)
+
+    def slab_pages(self, cfg, seq_len):
+        total = -(-seq_len // cfg.page_size)
+        # sinks pin their page forever -> one extra slot of headroom
+        return self._round_slab(cfg, min(total, cfg.budget_pages + 2))
+
+    def write_score(self, k_tok, v_tok, pos_tok):
+        return importance.recency_score(pos_tok)
+
+    def prefill_scores(self, k, v, positions):
+        return importance.recency_score(positions)
+
+    def prefill_keep(self, k, v, positions, valid, cfg):
+        B, S = positions.shape
+        keep = min(cfg.cache_budget, S)
+        # sinks get +inf so they always survive; others ranked by recency
+        scores = importance.recency_score(positions)
+        scores = jnp.where(positions < cfg.num_sink_tokens, jnp.inf, scores)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        _, idx = jax.lax.top_k(scores, keep)
+        return jnp.sort(idx, axis=-1), scores
+
+    def post_write(self, cache, cfg, active=None):
+        if active is None:
+            active = jnp.ones((cache.batch,), bool)
+        over = active & (cache.total_valid() > cfg.cache_budget)
+        valid = cache.valid_mask()
+        B, P, page = valid.shape
+        # oldest non-sink token
+        cand = jnp.where(valid & (cache.pos >= cfg.num_sink_tokens),
+                         cache.pos, jnp.iinfo(jnp.int32).max)
+        flat = cand.reshape(B, P * page)
+        victim = jnp.argmin(flat, axis=-1).astype(jnp.int32)
+        cache = evict_token(cache, victim, enable=over)
+        need = active & (cache.cur_off >= cache.page_size)
+        cache, forced = _rollover_to_free_page(cache, need)
+        return EvictionOutcome(cache, jnp.zeros((B,), bool), over, forced)
+
+
+# ---------------------------------------------------------------------------
+# Unstructured baselines (token-per-step across pages)
+# ---------------------------------------------------------------------------
+
+class _UnstructuredTokenPolicy(EvictionPolicy):
+    structured = False
+
+    def slab_pages(self, cfg, seq_len):
+        total = -(-seq_len // cfg.page_size)
+        # token-level holes fragment pages (paper Limitation 1/Fig. 6): a page
+        # frees only when *all* its tokens have been individually evicted, so
+        # the working set needs headroom beyond budget/page_size.
+        return self._round_slab(cfg, min(total, 2 * cfg.budget_pages + 2))
+
+    def _evict_scores(self, cache):
+        """(B, P, page) dynamic importance; override if not stored score."""
+        return cache.score
+
+    def post_write(self, cache, cfg, active=None):
+        if active is None:
+            active = jnp.ones((cache.batch,), bool)
+        over = active & (cache.total_valid() > cfg.cache_budget)
+        valid = cache.valid_mask()
+        B, P, page = valid.shape
+        scores = jnp.where(valid, self._evict_scores(cache), jnp.inf)
+        victim = jnp.argmin(scores.reshape(B, P * page), axis=-1).astype(jnp.int32)
+        cache = evict_token(cache, victim, enable=over)
+        need = active & (cache.cur_off >= cache.page_size)
+        cache, forced = _rollover_to_free_page(cache, need)
+        return EvictionOutcome(cache, jnp.zeros((B,), bool), over, forced)
+
+
+class InverseKeyL2(_UnstructuredTokenPolicy):
+    name = "inverse_key_l2"
+
+    def write_score(self, k_tok, v_tok, pos_tok):
+        return importance.inverse_key_l2_score(k_tok)
+
+    def prefill_scores(self, k, v, positions):
+        return importance.inverse_key_l2_score(k)
+
+
+class KeyDiff(_UnstructuredTokenPolicy):
+    name = "keydiff"
+
+    def write_score(self, k_tok, v_tok, pos_tok):
+        # keydiff importance is global (needs the mean key) -> computed at
+        # eviction time from the live cache; stored score is unused.
+        return jnp.zeros(k_tok.shape[0], jnp.float32)
+
+    def prefill_scores(self, k, v, positions):
+        mean = jnp.mean(k.astype(jnp.float32), axis=1, keepdims=True)
+        return importance.keydiff_score(k, mean)
+
+    def _evict_scores(self, cache):
+        valid = cache.valid_mask()                          # (B,P,page)
+        kf = cache.k_dequant().astype(jnp.float32)
+        w = valid[..., None, None].astype(jnp.float32)
+        mean = jnp.sum(kf * w, axis=(1, 2)) / jnp.maximum(
+            jnp.sum(w, axis=(1, 2)), 1.0)                   # (B,KV,hd)
+        return importance.keydiff_score(kf, mean[:, None, None])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+POLICIES: dict[str, EvictionPolicy] = {
+    p.name: p
+    for p in (FullCache(), PagedEviction(), StreamingLLM(), InverseKeyL2(), KeyDiff())
+}
+
+
+def get_policy(name: str) -> EvictionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; available: {sorted(POLICIES)}") from None

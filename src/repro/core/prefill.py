@@ -1,0 +1,70 @@
+"""Paper Algorithm 2 — prefill-phase token compression.
+
+After the prompt forward pass produces contiguous K/V for a layer, the
+policy selects which tokens survive (budget C), *then* the survivors are
+divided into pages (evicting first avoids any cross-page data movement —
+paper §4.2). The output is a ready-to-decode :class:`PagedLayerCache`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CacheConfig
+from repro.core.paged_cache import (
+    PagedLayerCache,
+    init_layer_cache,
+    write_prompt_pages,
+)
+from repro.core.policies import EvictionPolicy
+
+
+def compress_and_page(k, v, positions, valid, policy: EvictionPolicy,
+                      cfg: CacheConfig, seq_len_hint: int | None = None,
+                      cache_dtype=None) -> PagedLayerCache:
+    """Build a paged cache from contiguous prompt K/V.
+
+    k, v      : (B, S, KV, hd)  (RoPE already applied to k)
+    positions : (B, S) int32 original token positions
+    valid     : (B, S) bool    (padding mask for ragged prompts)
+    """
+    B, S, KV, hd = k.shape
+    page = cfg.page_size
+    num_pages = policy.slab_pages(cfg, seq_len_hint or S)
+
+    idx, scores = policy.prefill_keep(k, v, positions, valid, cfg)  # (B, keep)
+    keep = idx.shape[1]
+
+    # slab-capacity cap: windowed layers size their slab to the attention
+    # window, which can be smaller than the policy's keep set (e.g. full
+    # cache on a sliding-window layer keeps only the newest window tokens)
+    cap = num_pages * page
+    if keep > cap:
+        sel_scores = jnp.take_along_axis(scores, idx, axis=1)
+        _, sub = jax.lax.top_k(sel_scores, cap)
+        sub = jnp.sort(sub, axis=-1)
+        idx = jnp.take_along_axis(idx, sub, axis=1)
+        keep = cap
+
+    take = lambda arr: jnp.take_along_axis(
+        arr, idx.reshape(B, keep, *([1] * (arr.ndim - 2))), axis=1)
+    k_sel, v_sel = take(k), take(v)
+    pos_sel = jnp.take_along_axis(positions, idx, axis=1)
+    score_sel = jnp.take_along_axis(scores, idx, axis=1)
+    # -inf marks padding/unselectable; +inf is legitimate (e.g. streaming
+    # sinks are pinned with +inf importance)
+    valid_sel = jnp.take_along_axis(valid, idx, axis=1) & \
+        ~jnp.isneginf(score_sel)
+    pos_sel = jnp.where(valid_sel, pos_sel, -1)
+
+    # pad the kept set up to a whole number of pages
+    pad = (-keep) % page
+    if pad:
+        k_sel = jnp.pad(k_sel, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_sel = jnp.pad(v_sel, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_sel = jnp.pad(pos_sel, ((0, 0), (0, pad)), constant_values=-1)
+        score_sel = jnp.pad(score_sel, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+
+    cache = init_layer_cache(B, num_pages, page, KV, hd,
+                             cache_dtype or k.dtype)
+    return write_prompt_pages(cache, k_sel, v_sel, pos_sel, score_sel)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for the paper's page scoring (Alg. 1, block mode).
+
+Computes S_j = mean_{i in page j, valid} ( mean_h ||V_i|| / mean_h ||K_i|| )
+directly from the paged cache slab — the fused replacement for reading
+K/V back to compute importance on the host. Runs once per page-full event
+(every page_size decode steps), which is the paper's amortization argument.
+
+Grid: (batch, page). Each step reduces one (page, KV, hd) K and V tile to a
+single page score. Empty pages score +inf (never the eviction argmin).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-6
+
+
+def _block_score_kernel(k_ref, v_ref, pos_ref, o_ref):
+    """k_ref, v_ref: (page, KV, hd); pos_ref: (1, page); o_ref: (1, 1)."""
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    pos = pos_ref[0, :]                                    # (page,)
+    kn = jnp.sqrt(jnp.sum(k * k, axis=-1))                 # (page, KV)
+    vn = jnp.sqrt(jnp.sum(v * v, axis=-1))
+    tok = jnp.mean(vn, axis=-1) / jnp.maximum(jnp.mean(kn, axis=-1), _EPS)
+    valid = pos >= 0
+    cnt = jnp.sum(valid.astype(jnp.float32))
+    ssum = jnp.sum(jnp.where(valid, tok, 0.0))
+    o_ref[0, 0] = jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1.0),
+                            jnp.float32(jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_score_kernel(k_pages, v_pages, pos, *, interpret: bool = True):
+    """k_pages, v_pages: (B, P, page, KV, hd); pos: (B, P, page) int32
+    -> page scores (B, P) f32."""
+    B, P, page, KV, hd = k_pages.shape
+    return pl.pallas_call(
+        _block_score_kernel,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((None, None, page, KV, hd), lambda b, p: (b, p, 0, 0, 0)),
+            pl.BlockSpec((None, None, page, KV, hd), lambda b, p: (b, p, 0, 0, 0)),
+            pl.BlockSpec((None, 1, page), lambda b, p: (b, p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, p: (b, p)),
+        out_shape=jax.ShapeDtypeStruct((B, P), jnp.float32),
+        interpret=interpret,
+    )(k_pages, v_pages, pos)

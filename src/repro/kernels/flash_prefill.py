@@ -1,0 +1,120 @@
+"""Pallas TPU causal flash-attention kernel (prefill hot path).
+
+Standard online-softmax flash with GQA support and optional sliding
+window. Grid: (batch, q_head, q_block, kv_block) with kv minor-most —
+(m, l, acc) scratch accumulates across kv blocks. Causally-skippable kv
+blocks are skipped with ``pl.when`` (block never contributes compute);
+with a sliding window, out-of-window blocks are likewise skipped — this is
+the triangle-skipping the blocked pure-jnp path cannot express (it masks
+but still multiplies; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  num_kv_blocks: int, block_q: int, block_k: int,
+                  window: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # causal: kv block relevant iff k_start <= q_end; window: skip blocks
+    # entirely below the window of every query row in the block
+    relevant = k_start <= q_start + block_q - 1
+    if window > 0:
+        relevant &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                  # (bq, hd)
+        k = k_ref[...].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= kpos > (qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        acc_scr[...] = acc_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_kernel(q, k, v, *, window: int = 0, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """Causal GQA flash attention.
+
+    q: (B, S, H, hd); k, v: (B, S, KV, hd) -> (B, S, H, hd).
+    S must be a multiple of the block sizes (pad upstream).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+
+    # layout: heads major so blocks are (block, hd) tiles
+    qT = jnp.swapaxes(q, 1, 2)                              # (B, H, S, hd)
+    kT = jnp.swapaxes(k, 1, 2)                              # (B, KV, S, hd)
+    vT = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(_flash_kernel, num_kv_blocks=nk, block_q=bq,
+                               block_k=bk, window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((None, None, bk, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((None, None, bk, hd),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qT, kT, vT)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the body
+executes in Python via the Pallas interpreter); on a real TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1) and
+the same ``pl.pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.core.paged_cache import PagedLayerCache
+from repro.kernels.block_score import block_score_kernel
+from repro.kernels.flash_prefill import flash_attention_kernel
+from repro.kernels.paged_attention import paged_attention_kernel
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
+                    scale: float | None = None):
+    """Decode attention over a paged cache via the Pallas kernel.
+
+    q: (B, H, hd) current-token queries -> (B, H, hd).
+    """
+    B, H, hd = q.shape
+    KV = cache.k.shape[3]
+    G = H // KV
+    # cache slab (B, P, page, KV, hd) -> kernel layout (B, KV, P, page, hd)
+    if cache.quantized:
+        # int8-native: K/V stream to VMEM as int8 and dequantize in-register
+        # (HBM traffic ~0.53x of bf16 — the quantized-KV composition the
+        # paper cites as future work)
+        from repro.kernels.paged_attention import paged_attention_kernel_int8
+        out = paged_attention_kernel_int8(
+            q.reshape(B, KV, G, hd),
+            jnp.moveaxis(cache.k, 3, 1), jnp.moveaxis(cache.v, 3, 1),
+            jnp.moveaxis(cache.k_scale, 3, 1),
+            jnp.moveaxis(cache.v_scale, 3, 1),
+            cache.pos, cur_pos, window=window, scale=scale,
+            interpret=INTERPRET)
+        return out.reshape(B, H, hd)
+    k_pages = jnp.moveaxis(cache.k, 3, 1)
+    v_pages = jnp.moveaxis(cache.v, 3, 1)
+    out = paged_attention_kernel(
+        q.reshape(B, KV, G, hd), k_pages, v_pages, cache.pos, cur_pos,
+        window=window, scale=scale, interpret=INTERPRET)
+    return out.reshape(B, H, hd)
+
+
+def page_scores(cache: PagedLayerCache):
+    """Fused page scoring (paper Alg.1 block mode): (B, P) f32."""
+    return block_score_kernel(cache.k, cache.v, cache.pos, interpret=INTERPRET)
+
+
+def flash_attention(q, k, v, *, window: int = 0, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128):
+    """Causal GQA flash attention. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    return flash_attention_kernel(q, k, v, window=window, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=INTERPRET)

@@ -1,0 +1,207 @@
+"""Pallas TPU paged-attention decode kernel.
+
+The TPU-native replacement for vLLM's CUDA PagedAttention (DESIGN.md §2):
+one query token per request attends over the paged KV cache, page by page,
+with flash (online-softmax) accumulation in VMEM scratch.
+
+Grid: (batch, kv_head, page). TPU grid execution is sequential over the
+minor-most dimension, so the (m, l, acc) scratch accumulates across the
+page axis; output is written on the last page step. Pages stream
+HBM -> VMEM one (page_size, head_dim) tile per K and V — the working set is
+O(page) regardless of context length, and evicted pages are skipped by the
+position mask (pos < 0), never touched by a gather.
+
+Layout: the wrapper (ops.py) permutes the cache slab to (B, KV, P, page, hd)
+so each block is a contiguous (page, hd) tile — page_size 16 x head_dim 128
+is MXU/VPU aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(q_ref, k_ref, v_ref, pos_ref, curpos_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, num_pages: int, window: int,
+                       scale: float):
+    """One (batch, kv_head, page) step.
+
+    q_ref   : (G, hd)      this kv-head's query group
+    k_ref   : (page, hd)   one page of keys
+    v_ref   : (page, hd)   one page of values
+    pos_ref : (1, page)    token positions (-1 == evicted/invalid)
+    curpos_ref : (1, 1)    current decode position
+    o_ref   : (G, hd)      output (written on the last page step)
+    scratch : m (G, 128), l (G, 128), acc (G, hd) f32
+    """
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[...].astype(jnp.float32)                  # (page, hd)
+    v = v_ref[...].astype(jnp.float32)                  # (page, hd)
+    pos = pos_ref[0, :]                                 # (page,) int32
+    cur = curpos_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= cur)
+    if window > 0:
+        valid &= pos > (cur - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)           # (G, page)
+
+    m_prev = m_scr[:, 0:1]                              # (G, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                     # (G, 1)
+    pexp = jnp.exp(s - m_new)                           # (G, page)
+    pexp = jnp.where(valid[None, :], pexp, 0.0)
+    l_new = alpha * l_scr[:, 0:1] + jnp.sum(pexp, axis=-1, keepdims=True)
+    acc_new = alpha * acc_scr[...] + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc_new
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_attn_kernel_int8(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref,
+                            curpos_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                            num_pages: int, window: int, scale: float):
+    """int8 variant: K/V tiles arrive quantized; dequantization happens in
+    VMEM (one multiply per tile) so HBM traffic is the int8 bytes + scales —
+    the fused memory win the paper's future-work section points at.
+
+    ks_ref, vs_ref: (1, page) f32 absmax scales for this page."""
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32) * (ks_ref[0, :] / 127.0)[:, None]
+    v = v_ref[...].astype(jnp.float32) * (vs_ref[0, :] / 127.0)[:, None]
+    pos = pos_ref[0, :]
+    cur = curpos_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= cur)
+    if window > 0:
+        valid &= pos > (cur - window)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[:, 0:1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new)
+    pexp = jnp.where(valid[None, :], pexp, 0.0)
+    l_new = alpha * l_scr[:, 0:1] + jnp.sum(pexp, axis=-1, keepdims=True)
+    acc_new = alpha * acc_scr[...] + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc_new
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
+def paged_attention_kernel_int8(q, k_pages, v_pages, k_scales, v_scales, pos,
+                                cur_pos, *, window: int = 0,
+                                scale: float | None = None,
+                                interpret: bool = True):
+    """q: (B, KV, G, hd) f32/bf16; k_pages/v_pages: (B, KV, P, page, hd) int8;
+    k_scales/v_scales: (B, KV, P, page) f32; pos: (B, P, page) int32."""
+    B, KV, G, hd = q.shape
+    P, page = k_pages.shape[2], k_pages.shape[3]
+    scale = scale if scale is not None else hd ** -0.5
+    kernel = functools.partial(_paged_attn_kernel_int8, num_pages=P,
+                               window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, P),
+        in_specs=[
+            pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, None, page, hd),
+                         lambda b, h, p: (b, h, p, 0, 0)),
+            pl.BlockSpec((None, None, None, page, hd),
+                         lambda b, h, p: (b, h, p, 0, 0)),
+            pl.BlockSpec((None, None, 1, page), lambda b, h, p: (b, h, p, 0)),
+            pl.BlockSpec((None, None, 1, page), lambda b, h, p: (b, h, p, 0)),
+            pl.BlockSpec((None, 1, page), lambda b, h, p: (b, p, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B, KV, G, hd), k_pages, v_pages, k_scales, v_scales, pos,
+      cur_pos.reshape(B, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
+def paged_attention_kernel(q, k_pages, v_pages, pos, cur_pos, *, window: int = 0,
+                           scale: float | None = None, interpret: bool = True):
+    """q: (B, KV, G, hd); k_pages/v_pages: (B, KV, P, page, hd);
+    pos: (B, P, page) int32; cur_pos: (B,) int32 -> (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    P, page = k_pages.shape[2], k_pages.shape[3]
+    scale = scale if scale is not None else hd ** -0.5
+
+    kernel = functools.partial(_paged_attn_kernel, num_pages=P, window=window,
+                               scale=scale)
+    grid = (B, KV, P)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, None, page, hd),
+                         lambda b, h, p: (b, h, p, 0, 0)),
+            pl.BlockSpec((None, None, None, page, hd),
+                         lambda b, h, p: (b, h, p, 0, 0)),
+            pl.BlockSpec((None, 1, page), lambda b, h, p: (b, p, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q.reshape(B, KV, G, hd),
+        k_pages, v_pages,
+        pos,
+        cur_pos.reshape(B, 1),
+    )
+    return out

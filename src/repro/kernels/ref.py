@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+def paged_attention_ref(q, k_pages, v_pages, pos, cur_pos, *, window: int = 0,
+                        scale: float | None = None):
+    """Same signature/layout as kernels.paged_attention.paged_attention_kernel.
+
+    q: (B, KV, G, hd); k_pages/v_pages: (B, KV, P, page, hd);
+    pos: (B, P, page); cur_pos: (B,) -> (B, KV, G, hd).
+    """
+    B, KV, G, hd = q.shape
+    P, page = k_pages.shape[2], k_pages.shape[3]
+    scale = scale if scale is not None else hd ** -0.5
+    kf = k_pages.reshape(B, KV, P * page, hd).astype(jnp.float32)
+    vf = v_pages.reshape(B, KV, P * page, hd).astype(jnp.float32)
+    pf = pos.reshape(B, P * page)
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), kf) * scale
+    mask = (pf >= 0) & (pf <= cur_pos[:, None])
+    if window > 0:
+        mask &= pf > (cur_pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bkgs,bksd->bkgd", p, vf).astype(q.dtype)
+
+
+def block_score_ref(k_pages, v_pages, pos):
+    """k_pages, v_pages: (B, P, page, KV, hd); pos: (B, P, page) -> (B, P)."""
+    kn = jnp.linalg.norm(k_pages.astype(jnp.float32), axis=-1)  # (B,P,page,KV)
+    vn = jnp.linalg.norm(v_pages.astype(jnp.float32), axis=-1)
+    tok = jnp.mean(vn, axis=-1) / jnp.maximum(jnp.mean(kn, axis=-1), _EPS)
+    valid = pos >= 0
+    cnt = jnp.sum(valid, axis=-1)
+    ssum = jnp.sum(jnp.where(valid, tok, 0.0), axis=-1)
+    return jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), jnp.inf)
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, scale: float | None = None):
+    """Causal GQA attention oracle. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)
+    mask = qpos[None, :, None] >= qpos[None, None, :]       # (1, Sq, Sk)
+    if window > 0:
+        mask &= qpos[None, None, :] > (qpos[None, :, None] - window)
+    s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, with ShapeDtypeStruct stand-ins
+(zero allocation), and derive the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape decode_32k --mesh single --policy full
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+
+The two lines above this docstring MUST stay the first statements in the
+file: jax locks the device count at first init, and the 512 placeholder
+host devices exist only for this entry point (tests/benches see 1 device).
+"""
+
+import argparse
+import json
+import time
+from dataclasses import asdict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, CacheConfig, get_arch, get_shape
+from repro.core.policies import get_policy
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.multimodal import input_specs
+from repro.models.transformer import (
+    decode_step,
+    forward_prefill,
+    init_decode_caches,
+    init_model,
+)
+from repro.sharding import rules
+from repro.training.optimizer import AdamWConfig, init_adamw
+from repro.training.train_step import make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def default_policy(shape_name: str) -> str:
+    """Baseline policy per shape (see EXPERIMENTS.md §Dry-run):
+    decode_32k baselines with the full cache (cache of seq_len, as the
+    assignment specifies); long_500k REQUIRES the paper's budget-capped
+    cache (that is the sub-quadratic mechanism; DESIGN.md §4)."""
+    return {"train_4k": "full", "prefill_32k": "full",
+            "decode_32k": "full", "long_500k": "paged_eviction"}[shape_name]
+
+
+def make_cache_cfg(policy: str, budget: int, page: int,
+                   cache_dtype: str = "bfloat16") -> CacheConfig:
+    return CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                       slab_multiple=16, dtype=cache_dtype)
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, policy_name: str,
+                    budget: int, page: int, zero1: bool,
+                    cache_dtype: str = "bfloat16", seq_parallel: bool = False):
+    """Returns (jitted_fn, example_args) ready for .lower(*args)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    B = shape.global_batch
+    params_shape = jax.eval_shape(partial(init_model, cfg=cfg),
+                                  jax.random.PRNGKey(0))
+    p_sh = rules.param_shardings(mesh, cfg, params_shape)
+    ac = rules.activation_constraint(mesh, B, seq_parallel=seq_parallel)
+    specs = input_specs(cfg, shape, for_decode=(shape.kind == "decode"))
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(init_adamw, params_shape)
+        o_sh = rules.opt_shardings(mesh, cfg, opt_shape, p_sh, zero1=zero1)
+        batch = {
+            "tokens": specs["tokens"],
+            "targets": jax.ShapeDtypeStruct(specs["tokens"].shape, jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.float32),
+        }
+        b_sh = rules.data_shardings(mesh, batch)
+        opt_cfg = AdamWConfig()
+        step = make_train_step(cfg, opt_cfg, ac=ac,
+                               moment_shardings=o_sh.mu if zero1 else None)
+        if cfg.cross_attention:
+            fn = lambda p, o, b, c: step(p, o, b, cond=c)
+            cond_sh = rules.data_shardings(mesh, specs["cond"])
+            jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh, cond_sh),
+                          out_shardings=(p_sh, o_sh, None),
+                          donate_argnums=(0, 1))
+            return jfn, (params_shape, opt_shape, batch, specs["cond"])
+        fn = lambda p, o, b: step(p, o, b)
+        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+        return jfn, (params_shape, opt_shape, batch)
+
+    policy = get_policy(policy_name)
+    ccfg = make_cache_cfg(policy_name, budget, page, cache_dtype)
+
+    if shape.kind == "prefill":
+        def fn(p, tokens, cond=None):
+            return forward_prefill(p, cfg, tokens, policy, ccfg, cond=cond,
+                                   ac=ac, total_seq_hint=shape.seq_len)
+        tok_sh = rules.data_shardings(mesh, specs["tokens"])
+        if cfg.cross_attention:
+            cond_sh = rules.data_shardings(mesh, specs["cond"])
+            jfn = jax.jit(fn, in_shardings=(p_sh, tok_sh, cond_sh))
+            return jfn, (params_shape, specs["tokens"], specs["cond"])
+        jfn = jax.jit(fn, in_shardings=(p_sh, tok_sh))
+        return jfn, (params_shape, specs["tokens"])
+
+    # decode: one token against a cache covering shape.seq_len
+    cache_shape = jax.eval_shape(
+        partial(init_decode_caches, cfg, B, shape.seq_len, policy, ccfg))
+    c_sh = rules.cache_shardings(mesh, cfg, cache_shape, B)
+
+    def fn(p, tokens, cache):
+        return decode_step(p, cfg, tokens, cache, policy, ccfg, ac=ac)
+
+    tok_sh = rules.data_shardings(mesh, specs["tokens"])
+    jfn = jax.jit(fn, in_shardings=(p_sh, tok_sh, c_sh),
+                  out_shardings=(None, c_sh), donate_argnums=(2,))
+    return jfn, (params_shape, specs["tokens"], cache_shape)
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, policy_name: str,
+            budget: int, page: int, zero1: bool, out_dir: str,
+            verbose: bool = True, cache_dtype: str = "bfloat16",
+            seq_parallel: bool = False, layout: str = "2d") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"),
+                                layout=layout)
+    chips = mesh.size
+    shape = get_shape(shape_name)
+    cfg = get_arch(arch)
+    t0 = time.perf_counter()
+    with mesh:
+        jfn, args = build_lowerable(arch, shape_name, mesh, policy_name,
+                                    budget, page, zero1, cache_dtype,
+                                    seq_parallel)
+        # trip-count-aware flop/byte counts from the jaxpr (XLA's
+        # cost_analysis counts scan bodies once — see analysis.jaxpr_cost)
+        jpr = jax.make_jaxpr(jfn)(*args)
+        jflops, jbytes = analysis.jaxpr_cost(jpr)
+        lowered = jfn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+    t_total = time.perf_counter() - t0
+    r = analysis.analyze(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        policy=policy_name, kind=shape.kind, chips=chips,
+        model_flops=analysis.model_flops_estimate(cfg, shape),
+        compile_seconds=t_total,
+        default_group=16,
+        jaxpr_flops=jflops, jaxpr_bytes=jbytes,
+        notes=f"budget={budget} page={page} zero1={zero1} "
+              f"cache_dtype={cache_dtype} seq_parallel={seq_parallel} "
+              f"layout={layout} lower_s={t_lower:.1f}")
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{mesh_name}_{policy_name}" + \
+          ("_zero1" if zero1 else "") + \
+          (f"_{cache_dtype}" if cache_dtype != "bfloat16" else "") + \
+          ("_sp" if seq_parallel else "") + \
+          (f"_{layout}" if layout != "2d" else "")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(asdict(r), f, indent=1)
+    if verbose:
+        ma = r.memory_analysis
+        print(f"[dryrun] {tag}: OK compile={t_total:.1f}s "
+              f"compute={r.compute_s:.3e}s memory={r.memory_s:.3e}s "
+              f"collective={r.collective_s:.3e}s dominant={r.dominant} "
+              f"useful={r.useful_flops_ratio:.2f} mem={ma}")
+    return asdict(r)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--policy", default=None,
+                    help="eviction policy (default: per-shape baseline)")
+    ap.add_argument("--budget", type=int, default=4096)
+    ap.add_argument("--page", type=int, default=16)
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer moments over data (ZeRO-1)")
+    ap.add_argument("--cache-dtype", default="bfloat16",
+                    choices=("bfloat16", "float32", "int8"),
+                    help="KV cache dtype (int8 = quantized cache)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-style sequence-parallel layer inputs")
+    ap.add_argument("--layout", default="2d", choices=("2d", "ep"),
+                    help="mesh layout: 2d=(data,model); ep=(data,expert,tp) "
+                         "expert-parallel MoE")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) for --mesh")
+    ap.add_argument("--out", default=os.path.abspath(ART_DIR))
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED_ARCHS
+    combos = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in combos:
+        pol = args.policy or default_policy(s)
+        try:
+            run_one(a, s, args.mesh, pol, args.budget, args.page,
+                    args.zero1, args.out, cache_dtype=args.cache_dtype,
+                    seq_parallel=args.seq_parallel, layout=args.layout)
+        except Exception as e:
+            failures.append((a, s, repr(e)))
+            print(f"[dryrun] {a} x {s} x {args.mesh} x {pol}: FAIL {e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: dump the largest collectives (shape, dtype, group) from
+a compiled (arch x shape x mesh x policy) combination — the 'profile' the
+§Perf hillclimb iterates against (no real TPU: the lowered IR is the trace).
+
+    PYTHONPATH=src python -m repro.launch.inspect_collectives \
+        --arch mixtral-8x7b --shape train_4k --top 15
+"""
+
+import argparse
+import re
+
+from repro.launch.analysis import _COLL_RE, _group_size, _type_bytes
+
+
+def collective_lines(hlo_text: str, top: int = 20):
+    rows = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group(2)
+        b = _type_bytes(m.group(1))
+        g = _group_size(line, 16)
+        name = line.strip().split(" = ")[0][-60:]
+        rows.append((b, op, g, m.group(1)[:60], name))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--budget", type=int, default=4096)
+    ap.add_argument("--page", type=int, default=16)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_lowerable, default_policy
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    pol = args.policy or default_policy(args.shape)
+    with mesh:
+        jfn, fargs = build_lowerable(args.arch, args.shape, mesh, pol,
+                                     args.budget, args.page, args.zero1)
+        compiled = jfn.lower(*fargs).compile()
+    txt = compiled.as_text()
+    print(f"== top collectives: {args.arch} x {args.shape} x {args.mesh} "
+          f"x {pol} ==")
+    for b, op, g, ty, name in collective_lines(txt, args.top):
+        print(f"  {b / 1e9:8.2f} GB  {op:18s} group={g:3d}  {ty}  {name}")
+
+
+if __name__ == "__main__":
+    main()

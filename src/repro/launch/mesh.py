@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``--xla_force_host_platform_device_count`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, layout: str = "2d"):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+    axis crosses the (slow) inter-pod links, so shardings fold it into the
+    data-parallel dimension (DESIGN.md §5).
+
+    ``layout="ep"``: the same chips factored as (data, expert, tp) =
+    (16, 8, 2) — expert-parallel MoE (experts live on the "expert" axis,
+    tokens move via all-to-all; expert-internal d_ff splits over "tp").
+    Non-MoE weights shard over the combined ("expert","tp") 16-way axes, so
+    dense layers are unchanged."""
+    if layout == "ep":
+        shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+        axes = ("pod", "data", "expert", "tp") if multi_pod else \
+            ("data", "expert", "tp")
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# --- hardware constants (TPU v5e; roofline denominators) --------------------
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,101 @@
+"""Training driver.
+
+CPU-scale (this container):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \
+        --steps 50 --batch 8 --seq 128
+
+Production mesh (real TPU pod): drop --reduced, pass --mesh single|multi;
+the same code path pjit-shards params/opt/batch per repro.sharding.rules.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.multimodal import make_inputs
+from repro.models.transformer import init_model
+from repro.sharding import rules
+from repro.training import (
+    AdamWConfig,
+    DataConfig,
+    init_adamw,
+    lm_batch,
+    make_train_step,
+    save_checkpoint,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-scale) variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mesh", default=None, choices=(None, "single", "multi"),
+                    help="production mesh (requires matching device count)")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=args.warmup,
+                          total_steps=args.steps)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_model(key, cfg)
+    opt = init_adamw(params)
+
+    step_fn = make_train_step(cfg, opt_cfg)
+    if args.mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        p_sh = rules.param_shardings(mesh, cfg, jax.eval_shape(lambda: params))
+        o_sh = rules.opt_shardings(mesh, cfg, jax.eval_shape(lambda: opt), p_sh)
+        jstep = jax.jit(lambda p, o, b: step_fn(p, o, b),
+                        in_shardings=(p_sh, o_sh, None),
+                        out_shardings=(p_sh, o_sh, None),
+                        donate_argnums=(0, 1))
+    else:
+        jstep = jax.jit(lambda p, o, b: step_fn(p, o, b), donate_argnums=(0, 1))
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      batch_size=args.batch, seed=args.seed)
+    cond = None
+    if cfg.cross_attention:
+        cond = make_inputs(jax.random.PRNGKey(1), cfg, args.batch, 4)["cond"]
+        step_fn_c = make_train_step(cfg, opt_cfg)
+        jstep = jax.jit(lambda p, o, b: step_fn_c(p, o, b, cond=cond),
+                        donate_argnums=(0, 1))
+
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v)
+             for k, v in lm_batch(dcfg, i, num_codebooks=cfg.num_codebooks).items()}
+        params, opt, m = jstep(params, opt, b)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"ce={float(m['ce']):.4f} lr={float(m['lr']):.2e} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"({(time.perf_counter()-t0):.1f}s)")
+        if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            path = save_checkpoint(args.ckpt_dir, i + 1,
+                                   {"params": params, "opt": opt})
+            print(f"  checkpoint -> {path}")
+    print(f"done: {args.steps} steps in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

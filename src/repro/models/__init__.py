@@ -1,0 +1,19 @@
+"""Pure-JAX model substrate."""
+from repro.models.transformer import (
+    LayerCaches,
+    ModelCache,
+    decode_step,
+    embed_tokens,
+    forward_prefill,
+    forward_train,
+    init_decode_caches,
+    init_model,
+    lm_logits,
+)
+from repro.models.multimodal import input_specs, make_inputs
+
+__all__ = [
+    "LayerCaches", "ModelCache", "decode_step", "embed_tokens",
+    "forward_prefill", "forward_train", "init_decode_caches", "init_model",
+    "lm_logits", "input_specs", "make_inputs",
+]

@@ -1,0 +1,204 @@
+"""GQA attention layer — contiguous (train/prefill) and paged (decode) paths.
+
+Supports: QKV bias (qwen), qk-norm (chameleon/gemma3), sliding-window
+(mixtral) and local/global interleave (gemma3), cross-attention to a static
+conditioning cache (musicgen), logit soft-capping.
+
+Decode attends against a :class:`PagedLayerCache` via either the pure-jnp
+reference (``repro.kernels.ref``-equivalent, used on CPU) or the Pallas
+paged-attention kernel (``repro.kernels.ops``, the TPU hot path).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.paged_cache import PagedLayerCache
+from repro.models.common import (
+    apply_rope,
+    causal_attention,
+    dense_init,
+    rms_head_norm,
+)
+
+
+class StaticKVCache(NamedTuple):
+    """Non-growing KV over conditioning (cross-attention); exempt from
+    eviction — it is O(cond_len) and shared across all decode steps."""
+    k: jax.Array  # (B, Sc, KV, hd)
+    v: jax.Array  # (B, Sc, KV, hd)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    D, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, KV * hd, dt),
+        "wv": dense_init(ks[2], D, KV * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt, scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def project_qkv(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    """x: (B, S, D) -> q (B,S,H,hd), k, v (B,S,KV,hd). RoPE + qk-norm applied."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if "q_norm" in params:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# contiguous path (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_forward(params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                      return_kv: bool = False, use_pallas: bool = False):
+    """Causal self-attention over a contiguous sequence.
+
+    Returns (out (B,S,D), (k, v) post-rope if return_kv else None).
+    ``use_pallas``: route through the Pallas flash kernel (TPU hot path;
+    proper triangle/window block skipping) when the shape is tileable —
+    falls back to the blocked jnp path otherwise.
+    """
+    q, k, v = project_qkv(params, cfg, x, positions)
+    window = 0
+    if spec.attn_kind == "swa":
+        window = cfg.sliding_window
+    elif spec.attn_kind == "local":
+        window = cfg.local_window
+    B, S = x.shape[:2]
+    hd = cfg.resolved_head_dim
+    if use_pallas and S % 128 == 0 and hd % 8 == 0:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, window=window)
+    else:
+        out = causal_attention(q, k, v, q_positions=positions,
+                               kv_positions=positions, window=window)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return out, ((k, v) if return_kv else None)
+
+
+def cross_attention_forward(params, cfg: ModelConfig, x, cache: StaticKVCache):
+    """Cross-attention to static conditioning KV (no causality, no rope)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   cache.k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, cache.v.astype(jnp.float32))
+    o = o.reshape(B, S, H * hd).astype(x.dtype)
+    return o @ params["wo"]
+
+
+def make_cross_cache(params, cfg: ModelConfig, cond) -> StaticKVCache:
+    """cond: (B, Sc, D) conditioning embeddings -> static KV."""
+    B, Sc, D = cond.shape
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    k = (cond @ params["wk"]).reshape(B, Sc, KV, hd)
+    v = (cond @ params["wv"]).reshape(B, Sc, KV, hd)
+    return StaticKVCache(k=k, v=v)
+
+
+# ---------------------------------------------------------------------------
+# paged decode path
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
+                        sink_keep: int = 0, scale: float | None = None,
+                        soft_cap: float = 0.0):
+    """Single-token GQA attention over a paged cache (pure-jnp oracle).
+
+    q: (B, H, hd) — the current token's query (RoPE'd at cur_pos).
+    cur_pos: (B,) int32 current position (new token's position).
+    Masks: invalid slots (pos<0), future slots (pos>cur_pos), and for
+    windowed layers pos <= cur_pos - window (sinks exempt).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    P, page, KV = cache.k.shape[1], cache.k.shape[2], cache.k.shape[3]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf = cache.k_dequant().reshape(B, P * page, KV, hd)
+    vf = cache.v_dequant().reshape(B, P * page, KV, hd)
+    pos = cache.pos.reshape(B, P * page)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if soft_cap:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    mask = (pos >= 0) & (pos <= cur_pos[:, None])
+    if window:
+        in_win = pos > (cur_pos[:, None] - window)
+        if sink_keep:
+            in_win |= pos < sink_keep
+        mask &= in_win
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def decode_project_qkv(params, cfg: ModelConfig, x, cur_pos):
+    """x: (B, D) single token -> q (B,H,hd), k, v (B,KV,hd), RoPE at cur_pos."""
+    B, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, H, hd)
+    k = k.reshape(B, KV, hd)
+    v = v.reshape(B, KV, hd)
+    if "q_norm" in params:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    # apply_rope expects (..., seq, heads, hd); lift to seq=1 then squeeze
+    q = apply_rope(q[:, None], cur_pos[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], cur_pos[:, None], cfg.rope_theta)[:, 0]
+    return q, k, v

@@ -1,0 +1,226 @@
+"""Shared model substrate: norms, RoPE, embeddings, initializers, and a
+memory-bounded blocked causal attention (online softmax) used for long
+prefill sequences.
+
+Everything is functional: ``init_*`` returns a params pytree, ``apply``-style
+functions are pure. No flax/haiku — params are plain nested dicts so they
+shard transparently under pjit.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16, "int8": jnp.int8}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg_norm: str, dim: int, dtype):
+    if cfg_norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_norm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * lax.rsqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps: float = 1e-6):
+    """qk-norm: RMS-normalize over the head dim. x: (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim) or (..., heads, head_dim) w/ scalar pos.
+    positions broadcastable to x's seq axes. Rotates pairs (x[2i], x[2i+1])."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def soft_cap(logits, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# blocked causal attention (pure-jnp flash-style; the memory-safe default
+# for long sequences; the Pallas kernel in repro.kernels is the fast path)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, KV, G, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32))
+
+
+def full_causal_attention(q, k, v, *, q_positions, kv_positions, window: int = 0,
+                          sink_keep: int = 0, scale: float | None = None):
+    """Reference causal (optionally windowed) GQA attention, materializing the
+    (Sq, Sk) score matrix. Use only for modest S; see blocked variant below.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).
+    window>0: attend only to kv with q_pos - window < kv_pos (plus causal).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = _gqa_scores(qg, k) * scale                    # (B,KV,G,Sq,Sk)
+    mask = kv_positions[:, None, :] <= q_positions[:, :, None]   # (B,Sq,Sk)
+    if window:
+        mask &= kv_positions[:, None, :] > (q_positions[:, :, None] - window)
+        if sink_keep:
+            mask |= (kv_positions[:, None, :] < sink_keep) & (
+                kv_positions[:, None, :] <= q_positions[:, :, None])
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # rows with no valid kv
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def blocked_causal_attention(q, k, v, *, q_positions, kv_positions,
+                             window: int = 0, q_chunk: int = 1024,
+                             kv_chunk: int = 1024, scale: float | None = None):
+    """Memory-bounded causal GQA attention via online softmax over kv chunks.
+
+    Never materializes more than (q_chunk, kv_chunk) scores per head. Used
+    for 32k+ prefill where the full score matrix would not fit HBM.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+    qp = q_positions.reshape(B, nq, q_chunk)
+    kp = kv_positions.reshape(B, nk, kv_chunk)
+
+    def q_block(carry, qi):
+        qb = qg[:, qi]                                   # (B,qc,KV,G,hd)
+        qpb = qp[:, qi]                                  # (B,qc)
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            kb, vb, kpb = kc[:, ki], vc[:, ki], kp[:, ki]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            mask = kpb[:, None, :] <= qpb[:, :, None]
+            if window:
+                mask &= kpb[:, None, :] > (qpb[:, :, None] - window)
+            s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard: fully-masked rows keep m=-inf; exp(-inf - -inf) -> nan
+            safe_m = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - safe_m[..., None])
+            corr = jnp.exp(jnp.where(jnp.isneginf(m), 0.0, m) - safe_m)
+            corr = jnp.where(jnp.isneginf(m), 0.0, corr)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+            jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32),
+        )
+        # flash-backward memory profile: remat each kv block so autodiff
+        # saves only the (m, l, acc) carries, recomputing the (qc, kc) score
+        # block in the backward pass instead of storing it (§Perf mixtral
+        # iter 3: -100+GB/device of scan residuals for ~+25% attention flops)
+        (m, l, acc), _ = lax.scan(
+            jax.checkpoint(kv_block, prevent_cse=False), init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,KV,G,qc,hd)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, q_chunk, KV * G, hd)
+        return carry, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_block, 0, jnp.arange(nq))        # (nq,B,qc,H,hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+
+
+def causal_attention(q, k, v, *, q_positions, kv_positions, window: int = 0,
+                     scale: float | None = None, blocked_threshold: int = 8192):
+    """Dispatch: full matrix for short sequences, blocked for long ones."""
+    if q.shape[1] * k.shape[1] <= blocked_threshold * blocked_threshold // 16 \
+            or q.shape[1] < 1024:
+        return full_causal_attention(q, k, v, q_positions=q_positions,
+                                     kv_positions=kv_positions, window=window,
+                                     scale=scale)
+    q_chunk = min(1024, q.shape[1])
+    kv_chunk = min(1024, k.shape[1])
+    return blocked_causal_attention(q, k, v, q_positions=q_positions,
+                                    kv_positions=kv_positions, window=window,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                    scale=scale)

@@ -1,0 +1,173 @@
+"""Selective SSM (Mamba) mixer — Jamba's recurrent layer.
+
+Training/prefill: `lax.scan` over the sequence carrying the (B, d_inner, N)
+SSM state (the chunked SSD formulation is a hillclimb variant; the scan
+form is the memory-safe baseline and exact).
+Decode: O(1) per-step state update — the reason long_500k is natural for
+hybrid archs (no KV cache to evict; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, d_conv - 1, d_inner) — trailing inputs window
+    ssm: jax.Array    # (B, d_inner, d_state) f32
+
+
+def init_mamba(key, cfg: ModelConfig):
+    dt_ = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    D, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dr, dc = cfg.resolved_dt_rank, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, dt_),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32) * 0.2).astype(dt_),
+        "conv_b": jnp.zeros((di,), dt_),
+        "x_proj": dense_init(ks[2], di, dr + 2 * ds, dt_),
+        "dt_proj": dense_init(ks[3], dr, di, dt_),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32)
+                             * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)),
+                     1e-4, None))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, D, dt_),
+    }
+
+
+def _ssm_inputs(params, cfg: ModelConfig, xc):
+    """xc: (..., di) post-conv activations -> dt (..., di), Bt, Ct (..., ds)."""
+    dr, ds = cfg.resolved_dt_rank, cfg.mamba_d_state
+    proj = xc @ params["x_proj"]
+    dt_in, Bt, Ct = jnp.split(proj.astype(jnp.float32), [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, Bt, Ct
+
+
+def mamba_forward(params, cfg: ModelConfig, x, ac=None):
+    """Full-sequence selective scan. x: (B, S, D) -> (B, S, D).
+
+    ``ac``: activation-sharding hook (rules.activation_constraint). The
+    (B, S, di) intermediates and the time-major scan inputs are pinned
+    explicitly — GSPMD drops their sharding through the moveaxis/scan
+    boundary otherwise (268 GB/device replicated f32 on jamba train).
+    """
+    from repro.sharding.rules import pin_inner, pin_time
+    pi, pt = pin_inner(ac), pin_time(ac)
+    B, S, D = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                       # (B, S, di)
+    xin, z = pi(xin), pi(z)
+
+    # depthwise causal conv1d
+    xp = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + S] * params["conv_w"][i] for i in range(dc))
+    xc = pi(jax.nn.silu(xc + params["conv_b"]))
+
+    dt, Bt, Ct = _ssm_inputs(params, cfg, xc)                # f32
+    dt = pi(dt)
+    A = -jnp.exp(params["A_log"])                            # (di, ds)
+    # avoid materializing (B,S,di,ds): scan over S instead
+    xcf = pi(xc.astype(jnp.float32))
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp                            # (B,di),(B,ds),(B,ds),(B,di)
+        dA_t = jnp.exp(dt_t[..., None] * A)                  # (B, di, ds)
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]      # (B, di, ds)
+        h = dA_t * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t)                 # (B, di)
+        return h, y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    xs = (pt(jnp.moveaxis(dt, 1, 0)), jnp.moveaxis(Bt, 1, 0),
+          jnp.moveaxis(Ct, 1, 0), pt(jnp.moveaxis(xcf, 1, 0)))
+
+    # nested chunked scan: the outer scan saves only chunk-boundary states
+    # for the backward pass; each (rematted) inner chunk recomputes its
+    # per-step (B, di, ds) discretization tensors instead of storing S of
+    # them (§Perf jamba iter 3 — the SSD-style memory profile without the
+    # blocked matmul formulation)
+    W = 256 if S % 256 == 0 else (64 if S % 64 == 0 else 1)
+    if W > 1:
+        xs_c = jax.tree.map(lambda a: a.reshape(S // W, W, *a.shape[1:]), xs)
+
+        def chunk(h, ch):
+            return lax.scan(step, h, ch)
+
+        _, ys = lax.scan(jax.checkpoint(chunk, prevent_cse=False), h0, xs_c)
+        ys = ys.reshape(S, B, di)
+    else:
+        _, ys = lax.scan(step, h0, xs)                       # (S, B, di)
+    y = pi(jnp.moveaxis(pt(ys), 0, 1)) + xcf * params["D"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return MambaState(
+        conv=jnp.zeros((batch, dc - 1, di), dtype),
+        ssm=jnp.zeros((batch, di, ds), jnp.float32),
+    )
+
+
+def mamba_prefill(params, cfg: ModelConfig, x):
+    """Like mamba_forward but also returns the final recurrent state so
+    decode can continue. x: (B, S, D) -> (out, MambaState)."""
+    B, S, D = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xp = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + S] * params["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    dt, Bt, Ct = _ssm_inputs(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])
+    xcf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        dA_t = jnp.exp(dt_t[..., None] * A)
+        h = dA_t * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        return h, jnp.einsum("bds,bs->bd", h, C_t)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bt, 1, 0),
+          jnp.moveaxis(Ct, 1, 0), jnp.moveaxis(xcf, 1, 0))
+    h_final, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xcf * params["D"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    state = MambaState(conv=xin[:, S - (dc - 1):, :], ssm=h_final)
+    return out, state
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x, state: MambaState):
+    """Single-token update. x: (B, D) -> (out (B, D), new state)."""
+    B, D = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                       # (B, di)
+    window = jnp.concatenate([state.conv, xin[:, None, :]], axis=1)  # (B, dc, di)
+    xc = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    dt, Bt, Ct = _ssm_inputs(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                          # (B, di, ds)
+    h = dA * state.ssm + (dt * xc.astype(jnp.float32))[..., None] * Bt[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, Ct) + xc.astype(jnp.float32) * params["D"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return out, MambaState(conv=window[:, 1:, :], ssm=h)

@@ -1,0 +1,24 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig):
+    dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, cfg.d_ff, dt),
+        "w_up": dense_init(k2, cfg.d_model, cfg.d_ff, dt),
+        "w_down": dense_init(k3, cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp_forward(params, cfg: ModelConfig, x):
+    act = activation(cfg.act)
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]

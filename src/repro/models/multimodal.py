@@ -1,0 +1,64 @@
+"""Modality frontend stubs + input spec builders.
+
+Per the assignment, ``[vlm]`` and ``[audio]`` entries cover the transformer
+BACKBONE only; the modality frontends are stubs:
+
+  chameleon (early fusion): the VQ-GAN image tokenizer is the stub. Image
+    patches arrive as *discrete token ids inside the shared vocab* (that is
+    what early fusion means) — the backbone is modality-agnostic, so
+    ``input_specs`` simply provides mixed text+image token ids.
+  musicgen: the EnCodec audio codec and the T5 text encoder are stubs.
+    ``input_specs`` provides (B, K, S) codebook token ids plus precomputed
+    conditioning embeddings (B, cond_len, d_model) for cross-attention.
+
+``make_inputs`` produces concrete random inputs (smoke tests / examples);
+``input_specs`` produces jax.ShapeDtypeStruct stand-ins (dry-run lowering,
+no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import dtype_of
+
+
+def token_shape(cfg: ModelConfig, batch: int, seq_len: int) -> tuple:
+    if cfg.num_codebooks > 1:
+        return (batch, cfg.num_codebooks, seq_len)
+    return (batch, seq_len)
+
+
+def decode_token_shape(cfg: ModelConfig, batch: int) -> tuple:
+    if cfg.num_codebooks > 1:
+        return (batch, cfg.num_codebooks)
+    return (batch,)
+
+
+def make_inputs(key, cfg: ModelConfig, batch: int, seq_len: int):
+    """Concrete random inputs: dict(tokens=..., cond=... or None)."""
+    kt, kc = jax.random.split(key)
+    tokens = jax.random.randint(kt, token_shape(cfg, batch, seq_len), 0,
+                                cfg.vocab_size, jnp.int32)
+    cond = None
+    if cfg.cross_attention:
+        cond = jax.random.normal(
+            kc, (batch, cfg.cond_len, cfg.d_model), jnp.float32
+        ).astype(dtype_of(cfg.dtype))
+    return {"tokens": tokens, "cond": cond}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, for_decode=False):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    B = shape.global_batch
+    if for_decode:
+        tokens = jax.ShapeDtypeStruct(decode_token_shape(cfg, B), jnp.int32)
+    else:
+        tokens = jax.ShapeDtypeStruct(token_shape(cfg, B, shape.seq_len), jnp.int32)
+    cond = None
+    if cfg.cross_attention:
+        cond = jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.d_model),
+                                    dtype_of(cfg.dtype))
+    return {"tokens": tokens, "cond": cond}

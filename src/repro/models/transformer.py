@@ -1,0 +1,483 @@
+"""Generic decoder stack assembled from a ModelConfig's layer pattern.
+
+Three execution modes:
+  forward_train   contiguous causal forward, logits over the whole sequence
+  forward_prefill contiguous forward that *builds the paged KV caches*
+                  (paper Alg.2 compression applied per layer before paging)
+  decode_step     one token per request against paged caches / recurrent
+                  states (paper Alg.3 eviction runs inside each attn layer)
+
+Deep stacks are lowered as ``lax.scan`` over repetitions of the layer
+pattern with stacked parameters: HLO size is O(pattern period), not
+O(num_layers) (gemma3: 6, jamba: 8, dense: 1). The remainder
+(num_layers mod period) is unrolled ("tail").
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import CacheConfig, LayerSpec, ModelConfig
+from repro.core.paged_cache import PagedLayerCache, write_token
+from repro.core.policies import EvictionPolicy
+from repro.core.prefill import compress_and_page
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import StaticKVCache
+from repro.models.common import apply_norm, dtype_of, embed_init, init_norm
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward, moe_forward_decode
+
+Identity = lambda x: x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg.dtype)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.norm, cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_mod.init_attention(ks[0], cfg)
+        if cfg.cross_attention:
+            p["xattn"] = attn_mod.init_attention(ks[1], cfg, cross=True)
+            p["norm_x"] = init_norm(cfg.norm, cfg.d_model, dt)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(ks[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = xlstm_mod.init_mlstm(ks[0], cfg)
+    elif spec.mixer == "slstm":
+        p["slstm"] = xlstm_mod.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp == "dense":
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dt)
+        p["mlp"] = init_mlp(ks[2], cfg)
+    elif spec.mlp == "moe":
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dt)
+        p["moe"] = init_moe(ks[2], cfg)
+    return p
+
+
+def init_model(key, cfg: ModelConfig):
+    cfg.validate()
+    dt = dtype_of(cfg.dtype)
+    pat = cfg.layer_pattern()
+    P, R, rem = cfg.pattern_period, cfg.full_pattern_reps, cfg.remainder_layers
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+    if cfg.num_codebooks > 1:
+        params["embed"] = jax.vmap(
+            lambda k: embed_init(k, cfg.vocab_size, cfg.d_model, dt)
+        )(jax.random.split(keys[0], cfg.num_codebooks))
+    else:
+        params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)
+
+    # pattern slots, each stacked over R repetitions
+    def slot_init(slot_key, spec):
+        return jax.vmap(lambda k: init_layer(k, cfg, spec))(
+            jax.random.split(slot_key, R))
+
+    slot_keys = jax.random.split(keys[1], P)
+    params["pattern"] = [slot_init(slot_keys[i], pat[i]) for i in range(P)] \
+        if R > 0 else []
+    tail_keys = jax.random.split(keys[2], max(rem, 1))
+    params["tail"] = [init_layer(tail_keys[i], cfg, pat[i]) for i in range(rem)]
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            params["lm_head"] = jax.vmap(
+                lambda k: embed_init(k, cfg.vocab_size, cfg.d_model, dt)
+            )(jax.random.split(keys[3], cfg.num_codebooks))
+        else:
+            params["lm_head"] = embed_init(keys[3], cfg.vocab_size, cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits (modality-aware; stubs documented in multimodal.py)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    """text/vlm: tokens (B, S) -> (B, S, D). audio: (B, K, S) -> sum of
+    per-codebook embeddings (MusicGen-style)."""
+    if cfg.num_codebooks > 1:
+        # tokens: (B, K, S); embed: (K, V, D) — per-codebook lookup, summed
+        per_cb = jax.vmap(lambda emb, tok: jnp.take(emb, tok, axis=0),
+                          in_axes=(0, 1))(params["embed"], tokens)  # (K, B, S, D)
+        return jnp.sum(per_cb, axis=0)
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    """x: (B, [S,] D) -> logits (B, [S,] vocab) or (B, [S,] K, vocab)."""
+    x = apply_norm(params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.num_codebooks > 1:
+        out = jnp.einsum("...d,kvd->...kv", x, head)
+    else:
+        out = jnp.einsum("...d,vd->...v", x, head)
+    from repro.models.common import soft_cap
+    return soft_cap(out.astype(jnp.float32), cfg.logit_soft_cap)
+
+
+# ---------------------------------------------------------------------------
+# per-layer forward (contiguous)
+# ---------------------------------------------------------------------------
+
+def _spec_window(cfg: ModelConfig, spec: LayerSpec) -> int:
+    if spec.attn_kind == "swa":
+        return cfg.sliding_window
+    if spec.attn_kind == "local":
+        return cfg.local_window
+    return 0
+
+
+def layer_forward(lp, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                  cond=None, ac: Callable = Identity, return_kv: bool = False,
+                  return_state: bool = False, use_pallas: bool = False):
+    """One decoder layer over a contiguous sequence.
+
+    Returns (x, aux_loss, extras) where extras carries KV (attn) or the
+    final recurrent state (mamba/xlstm) when requested.
+    """
+    x = ac(x)
+    h = apply_norm(lp["norm1"], x)
+    extras = None
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer == "attn":
+        a, kv = attn_mod.attention_forward(
+            lp["attn"], cfg, spec, h, positions, return_kv=return_kv,
+            use_pallas=use_pallas)
+        x = x + a
+        if cond is not None and "xattn" in lp:
+            hx = apply_norm(lp["norm_x"], x)
+            xc = attn_mod.make_cross_cache(lp["xattn"], cfg, cond)
+            x = x + attn_mod.cross_attention_forward(lp["xattn"], cfg, hx, xc)
+        extras = kv
+    elif spec.mixer == "mamba":
+        if return_state:
+            m, st = mamba_mod.mamba_prefill(lp["mamba"], cfg, h)
+            extras = st
+        else:
+            m = mamba_mod.mamba_forward(lp["mamba"], cfg, h, ac=ac)
+        x = x + m
+    elif spec.mixer == "mlstm":
+        if return_state:
+            m, st = xlstm_mod.mlstm_chunkwise(lp["mlstm"], cfg, h,
+                                              return_state=True)
+            extras = st
+        else:
+            m = xlstm_mod.mlstm_chunkwise(lp["mlstm"], cfg, h)
+        x = x + m
+    elif spec.mixer == "slstm":
+        if return_state:
+            m, st = xlstm_mod.slstm_forward(lp["slstm"], cfg, h,
+                                            return_state=True)
+            extras = st
+        else:
+            m = xlstm_mod.slstm_forward(lp["slstm"], cfg, h)
+        x = x + m
+    if spec.mlp == "dense":
+        h2 = apply_norm(lp["norm2"], x)
+        x = x + mlp_forward(lp["mlp"], cfg, h2)
+    elif spec.mlp == "moe":
+        h2 = apply_norm(lp["norm2"], x)
+        mo, stats = moe_forward(lp["moe"], cfg, h2, ac=ac)
+        x = x + mo
+        aux = stats.aux_loss
+    return x, aux, extras
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens, cond=None,
+                  ac: Callable = Identity, remat: bool = True,
+                  use_pallas: bool = False):
+    """tokens: (B, S) [or (B, K, S) audio] -> (logits, aux_loss)."""
+    x = embed_tokens(params, cfg, tokens)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pat = cfg.layer_pattern()
+    P = cfg.pattern_period
+
+    def rep_body(carry, slot_params):
+        x, aux = carry
+        for p in range(P):
+            x, a, _ = layer_forward(slot_params[p], cfg, pat[p], x, positions,
+                                    cond=cond, ac=ac, use_pallas=use_pallas)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(rep_body, prevent_cse=False) if remat else rep_body
+    carry = (x, jnp.zeros((), jnp.float32))
+    if params["pattern"]:
+        carry, _ = lax.scan(body, carry, tuple(params["pattern"]))
+    x, aux = carry
+    for i, lp in enumerate(params["tail"]):
+        x, a, _ = layer_forward(lp, cfg, pat[i], x, positions, cond=cond,
+                                ac=ac, use_pallas=use_pallas)
+        aux = aux + a
+    return lm_logits(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+class LayerCaches(NamedTuple):
+    """Per-layer decode state for one pattern slot (or tail layer). Exactly
+    one of the fields is populated, matching the slot's mixer kind; ``xattn``
+    rides along with ``kv`` for cross-attention archs."""
+    kv: Any = None        # PagedLayerCache (attn)
+    xattn: Any = None     # StaticKVCache (attn + cross_attention)
+    mamba: Any = None     # MambaState
+    mlstm: Any = None     # MLSTMState
+    slstm: Any = None     # SLSTMState
+
+
+class ModelCache(NamedTuple):
+    pattern: Any          # list over P slots; leaves stacked (R, ...)
+    tail: Any             # list over remainder layers (unstacked)
+    cur_pos: jax.Array    # (B,) int32 — next token position per request
+
+
+def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                        seq_len: int, policy: EvictionPolicy,
+                        ccfg: CacheConfig):
+    """Slab sizing for one layer (window-aware; see DESIGN.md §3)."""
+    window = _spec_window(cfg, spec)
+    hint = seq_len if not window else min(seq_len, window + ccfg.page_size)
+    return policy.slab_pages(ccfg, hint)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
+                       policy: EvictionPolicy, ccfg: CacheConfig,
+                       cond=None, dtype=None):
+    """Empty caches for decode-from-scratch (or dry-run ShapeDtype specs)."""
+    from repro.core.paged_cache import init_layer_cache
+    dt = dtype or dtype_of(ccfg.dtype)
+    pat = cfg.layer_pattern()
+    P, R, rem = cfg.pattern_period, cfg.full_pattern_reps, cfg.remainder_layers
+    hd = cfg.resolved_head_dim
+
+    def one(spec) -> LayerCaches:
+        if spec.mixer == "attn":
+            pages = _layer_cache_shapes(cfg, spec, batch, seq_len, policy, ccfg)
+            kv = init_layer_cache(batch, pages, ccfg.page_size,
+                                  cfg.num_kv_heads, hd, dt)
+            xa = None
+            if cfg.cross_attention:
+                xa = StaticKVCache(
+                    k=jnp.zeros((batch, cfg.cond_len, cfg.num_kv_heads, hd), dt),
+                    v=jnp.zeros((batch, cfg.cond_len, cfg.num_kv_heads, hd), dt))
+            return LayerCaches(kv=kv, xattn=xa)
+        if spec.mixer == "mamba":
+            return LayerCaches(mamba=mamba_mod.mamba_init_state(cfg, batch, dt))
+        if spec.mixer == "mlstm":
+            return LayerCaches(mlstm=xlstm_mod.mlstm_init_state(cfg, batch, dt))
+        return LayerCaches(slstm=xlstm_mod.slstm_init_state(cfg, batch))
+
+    stack = lambda c: jax.tree.map(lambda a: jnp.broadcast_to(a, (R,) + a.shape), c)
+    pattern = [stack(one(pat[p])) for p in range(P)] if R > 0 else []
+    tail = [one(pat[i]) for i in range(rem)]
+    return ModelCache(pattern=pattern, tail=tail,
+                      cur_pos=jnp.zeros((batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# prefill forward (build caches)
+# ---------------------------------------------------------------------------
+
+def _prefill_layer(lp, cfg, spec, x, positions, valid, cond, policy, ccfg,
+                   seq_len_hint, ac: Callable = Identity,
+                   use_pallas: bool = False) -> tuple:
+    """Layer forward that also produces its decode cache."""
+    x, aux, extras = layer_forward(
+        lp, cfg, spec, x, positions, cond=cond, ac=ac,
+        return_kv=(spec.mixer == "attn"), return_state=(spec.mixer != "attn"),
+        use_pallas=use_pallas)
+    if spec.mixer == "attn":
+        k, v = extras
+        window = _spec_window(cfg, spec)
+        hint = seq_len_hint if not window else min(
+            seq_len_hint, window + ccfg.page_size)
+        kv_valid = valid
+        if window:
+            # windowed layers never attend past the window again: drop
+            # out-of-window tokens at paging time (keeps slab small)
+            cur = jnp.max(jnp.where(valid, positions, -1), axis=-1, keepdims=True)
+            kv_valid = valid & (positions > cur - window)
+        cache = compress_and_page(k, v, positions, kv_valid, policy, ccfg,
+                                  seq_len_hint=hint,
+                                  cache_dtype=dtype_of(ccfg.dtype))
+        xa = None
+        if cond is not None and "xattn" in lp:
+            xa = attn_mod.make_cross_cache(lp["xattn"], cfg, cond)
+        return x, aux, LayerCaches(kv=cache, xattn=xa)
+    if spec.mixer == "mamba":
+        return x, aux, LayerCaches(mamba=extras)
+    if spec.mixer == "mlstm":
+        return x, aux, LayerCaches(mlstm=extras)
+    return x, aux, LayerCaches(slstm=extras)
+
+
+def forward_prefill(params, cfg: ModelConfig, tokens, policy: EvictionPolicy,
+                    ccfg: CacheConfig, cond=None, valid=None,
+                    ac: Callable = Identity, total_seq_hint: int | None = None,
+                    use_pallas: bool = False):
+    """Process the prompt, compress each attn layer's KV per Alg.2, return
+    (last-token logits, ModelCache).
+
+    ``total_seq_hint``: expected prompt+generation length — sizes the page
+    slabs so decode can continue in-place (defaults to the prompt length)."""
+    x = embed_tokens(params, cfg, tokens)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if valid is None:
+        valid = jnp.ones((B, S), bool)
+    positions = jnp.where(valid, positions, -1)
+    pat = cfg.layer_pattern()
+    P = cfg.pattern_period
+    hint = total_seq_hint or S
+
+    def rep_body(carry, slot_params):
+        x, aux = carry
+        caches = []
+        for p in range(P):
+            x, a, c = _prefill_layer(slot_params[p], cfg, pat[p], x, positions,
+                                     valid, cond, policy, ccfg, hint, ac=ac,
+                                     use_pallas=use_pallas)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), tuple(caches)
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    if params["pattern"]:
+        carry, pattern_caches = lax.scan(rep_body, carry, tuple(params["pattern"]))
+        pattern_caches = list(pattern_caches)
+    else:
+        pattern_caches = []
+    x, aux = carry
+    tail_caches = []
+    for i, lp in enumerate(params["tail"]):
+        x, a, c = _prefill_layer(lp, cfg, pat[i], x, positions, valid, cond,
+                                 policy, ccfg, hint, ac=ac,
+                                 use_pallas=use_pallas)
+        aux = aux + a
+        tail_caches.append(c)
+
+    # last valid token's hidden state -> next-token logits
+    last_idx = jnp.maximum(jnp.sum(valid.astype(jnp.int32), axis=-1) - 1, 0)
+    x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(params, cfg, x_last)
+    next_pos = jnp.sum(valid.astype(jnp.int32), axis=-1)
+    cache = ModelCache(pattern=pattern_caches, tail=tail_caches,
+                       cur_pos=next_pos)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def _decode_layer(lp, cfg, spec, x, cache: LayerCaches, cur_pos,
+                  policy: EvictionPolicy, ccfg: CacheConfig, active,
+                  use_pallas: bool = False):
+    """One layer, one token. x: (B, D). Returns (x, LayerCaches)."""
+    h = apply_norm(lp["norm1"], x)
+    if spec.mixer == "attn":
+        q, k, v = attn_mod.decode_project_qkv(lp["attn"], cfg, h, cur_pos)
+        kvc: PagedLayerCache = cache.kv
+        score = policy.write_score(k, v, cur_pos)
+        kvc = write_token(kvc, k, v, cur_pos, score, active=active)
+        window = _spec_window(cfg, spec)
+        if use_pallas:
+            from repro.kernels.ops import paged_attention
+            o = paged_attention(q, kvc, cur_pos=cur_pos, window=window)
+        else:
+            o = attn_mod.paged_attention_ref(q, kvc, cur_pos=cur_pos,
+                                             window=window)
+        outcome = policy.post_write(kvc, ccfg, active=active)
+        kvc = outcome.cache
+        B = x.shape[0]
+        o = o.reshape(B, -1) @ lp["attn"]["wo"]
+        x = x + o
+        if cache.xattn is not None:
+            hx = apply_norm(lp["norm_x"], x[:, None, :])
+            o2 = attn_mod.cross_attention_forward(lp["xattn"], cfg, hx,
+                                                  cache.xattn)
+            x = x + o2[:, 0]
+        cache = cache._replace(kv=kvc)
+    elif spec.mixer == "mamba":
+        m, st = mamba_mod.mamba_decode_step(lp["mamba"], cfg, h, cache.mamba)
+        x = x + m
+        cache = cache._replace(mamba=st)
+    elif spec.mixer == "mlstm":
+        m, st = xlstm_mod.mlstm_decode_step(lp["mlstm"], cfg, h, cache.mlstm)
+        x = x + m
+        cache = cache._replace(mlstm=st)
+    elif spec.mixer == "slstm":
+        m, st = xlstm_mod.slstm_decode_step(lp["slstm"], cfg, h, cache.slstm)
+        x = x + m
+        cache = cache._replace(slstm=st)
+    if spec.mlp == "dense":
+        h2 = apply_norm(lp["norm2"], x)
+        x = x + mlp_forward(lp["mlp"], cfg, h2)
+    elif spec.mlp == "moe":
+        h2 = apply_norm(lp["norm2"], x)
+        x = x + moe_forward_decode(lp["moe"], cfg, h2)
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: ModelCache,
+                policy: EvictionPolicy, ccfg: CacheConfig, active=None,
+                use_pallas: bool = False, ac: Callable = Identity):
+    """One decode step. tokens: (B,) [or (B, K) audio] -> (logits, cache)."""
+    if cfg.num_codebooks > 1:
+        # tokens: (B, K); embed: (K, V, D)
+        per_cb = jax.vmap(lambda emb, tok: jnp.take(emb, tok, axis=0),
+                          in_axes=(0, 1))(params["embed"], tokens)  # (K, B, D)
+        x = jnp.sum(per_cb, axis=0)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)        # (B, D)
+    B = x.shape[0]
+    if active is None:
+        active = jnp.ones((B,), bool)
+    cur_pos = cache.cur_pos
+    pat = cfg.layer_pattern()
+    P = cfg.pattern_period
+
+    def rep_body(x, xs):
+        slot_params, slot_caches = xs
+        new_caches = []
+        for p in range(P):
+            x, c = _decode_layer(slot_params[p], cfg, pat[p], ac(x),
+                                 slot_caches[p], cur_pos, policy, ccfg,
+                                 active, use_pallas)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if params["pattern"]:
+        x, pattern_caches = lax.scan(
+            rep_body, x, (tuple(params["pattern"]), tuple(cache.pattern)))
+        pattern_caches = list(pattern_caches)
+    else:
+        pattern_caches = []
+    tail_caches = []
+    for i, lp in enumerate(params["tail"]):
+        x, c = _decode_layer(lp, cfg, pat[i], ac(x), cache.tail[i], cur_pos,
+                             policy, ccfg, active, use_pallas)
+        tail_caches.append(c)
+    logits = lm_logits(params, cfg, x)
+    new_pos = jnp.where(active, cur_pos + 1, cur_pos)
+    return logits, ModelCache(pattern=pattern_caches, tail=tail_caches,
+                              cur_pos=new_pos)

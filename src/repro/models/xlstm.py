@@ -1,0 +1,310 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar
+memory with recurrent gate feedback).
+
+mLSTM training/prefill uses the **chunkwise-parallel** form (linear-attention
+style): quadratic within a chunk, matrix-state handoff between chunks — the
+TPU-native adaptation of the paper's fused CUDA recurrence (DESIGN.md §2).
+Decode is an exact O(1) recurrent step (including the depthwise-conv window
+carried in the state). Both share the same log-space stabilization, so
+chunkwise == step-scan up to float error (tested).
+
+sLSTM has true hidden-state feedback through the gates, so it is inherently
+sequential: `lax.scan` over tokens with block-diagonal per-head recurrent
+matrices.
+
+No KV cache exists in either block — PagedEviction is inapplicable to this
+family (DESIGN.md §Arch-applicability); the states below ARE the decode
+cache (constant-size: the reason long_500k is natural for this arch).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init
+
+_CONV = 4  # depthwise causal conv kernel width on the q/k branch
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array     # (B, H, hd, hd) f32 stabilized matrix memory
+    n: jax.Array     # (B, H, hd) f32 stabilized normalizer
+    m: jax.Array     # (B, H) f32 running log-stabilizer
+    conv: jax.Array  # (B, _CONV-1, di) trailing conv inputs
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, D) f32 cell
+    n: jax.Array   # (B, D) f32 normalizer
+    h: jax.Array   # (B, D) f32 hidden (feeds back into gates)
+    m: jax.Array   # (B, D) f32 stabilizer
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    D = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * D)
+    H = cfg.num_heads
+    assert di % H == 0
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], D, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (_CONV, di), jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "wq": dense_init(ks[2], di, di, dt),
+        "wk": dense_init(ks[3], di, di, dt),
+        "wv": dense_init(ks[4], di, di, dt),
+        "w_igate": dense_init(ks[5], di, H, jnp.float32, scale=0.01),
+        "b_igate": jnp.full((H,), -3.0, jnp.float32),
+        "w_fgate": dense_init(ks[6], di, H, jnp.float32, scale=0.01),
+        "b_fgate": jnp.full((H,), 3.0, jnp.float32),
+        "out_norm": jnp.ones((di,), dt),
+        "down_proj": dense_init(jax.random.fold_in(key, 99), di, D, dt),
+    }
+
+
+def _mlstm_up(params, x):
+    """x: (B, S, D) -> u, z: (B, S, di)."""
+    return jnp.split(x @ params["up_proj"], 2, axis=-1)
+
+
+def _conv_seq(params, u, conv_state=None):
+    """Depthwise causal conv over the sequence. u: (B, S, di).
+    conv_state: optional (B, _CONV-1, di) trailing inputs from the past."""
+    B, S, di = u.shape
+    if conv_state is None:
+        up = jnp.pad(u, ((0, 0), (_CONV - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    xc = sum(up[:, i:i + S] * params["conv_w"][i] for i in range(_CONV))
+    return jax.nn.silu(xc + params["conv_b"])
+
+
+def _qkv_gates_from(params, cfg: ModelConfig, u, xc):
+    """u, xc: (B, S, di) -> q,k,v (B,S,H,hd) f32, log-gates i,f (B,S,H)."""
+    B, S, di = u.shape
+    H = cfg.num_heads
+    hd = di // H
+    q = (xc @ params["wq"]).reshape(B, S, H, hd).astype(jnp.float32)
+    k = ((xc @ params["wk"]) / math.sqrt(hd)).reshape(B, S, H, hd).astype(jnp.float32)
+    v = (u @ params["wv"]).reshape(B, S, H, hd).astype(jnp.float32)
+    xcf = xc.astype(jnp.float32)
+    ig = xcf @ params["w_igate"] + params["b_igate"]
+    fg = jax.nn.log_sigmoid(xcf @ params["w_fgate"] + params["b_fgate"])
+    return q, k, v, ig, fg
+
+
+def _head_norm(h, scale, eps=1e-6):
+    """RMS norm per head over hd, then flatten heads. h: (B,S,H,hd) f32."""
+    ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    out = h * lax.rsqrt(ms + eps)
+    B, S, H, hd = h.shape
+    return out.reshape(B, S, H * hd) * scale.astype(jnp.float32)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    hd = di // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -jnp.inf, jnp.float32),
+        conv=jnp.zeros((batch, _CONV - 1, di), dtype),
+    )
+
+
+def mlstm_chunkwise(params, cfg: ModelConfig, x, state: MLSTMState | None = None,
+                    chunk: int = 256, return_state: bool = False):
+    """Chunkwise-parallel mLSTM. x: (B, S, D) -> (B, S, D) [, final state]."""
+    B, S, D = x.shape
+    di = int(cfg.xlstm_proj_factor * D)
+    H = cfg.num_heads
+    hd = di // H
+    W = min(chunk, S)
+    assert S % W == 0, (S, W)
+    NC = S // W
+    u, z = _mlstm_up(params, x)
+    xc = _conv_seq(params, u, None if state is None else state.conv)
+    q, k, v, ig, fg = _qkv_gates_from(params, cfg, u, xc)
+
+    if state is None:
+        state = mlstm_init_state(cfg, B, x.dtype)
+
+    cq = q.reshape(B, NC, W, H, hd)
+    ck = k.reshape(B, NC, W, H, hd)
+    cv = v.reshape(B, NC, W, H, hd)
+    cig = ig.reshape(B, NC, W, H)
+    cfgate = fg.reshape(B, NC, W, H)
+    tri = jnp.tril(jnp.ones((W, W), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                    # (B,H,hd,hd),(B,H,hd),(B,H)
+        qc, kc, vc, igc, fgc = inp                         # (B,W,H,hd) / (B,W,H)
+        b = jnp.cumsum(fgc, axis=1)                        # cumulative log decay
+        b_tot = b[:, -1]                                   # (B,H)
+        # intra-chunk log weights D[t,s] = b_t - b_s + i_s for s <= t
+        Dts = b[:, :, None, :] - b[:, None, :, :] + igc[:, None, :, :]
+        Dts = jnp.where(tri[None, :, :, None], Dts, -jnp.inf)
+        m_intra = jnp.max(Dts, axis=2)                     # (B,W,H)
+        m_state = m[:, None, :] + b                        # (B,W,H)
+        m_t = jnp.maximum(m_state, m_intra)
+        m_t = jnp.where(jnp.isneginf(m_t), 0.0, m_t)       # all-empty guard
+        w_state = jnp.exp(m_state - m_t)                   # (B,W,H)
+        h_inter = jnp.einsum("bwhd,bhde->bwhe", qc, C) * w_state[..., None]
+        n_inter = jnp.einsum("bwhd,bhd->bwh", qc, n) * w_state
+        P = jnp.exp(Dts - m_t[:, :, None, :])              # (B,t,s,H)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)
+        h_intra = jnp.einsum("btsh,btsh,bshe->bthe", P, qk, vc)
+        n_intra = jnp.einsum("btsh,btsh->bth", P, qk)
+        num = h_inter + h_intra
+        den = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))
+        h_out = num / den[..., None]
+        # ---- state handoff ---------------------------------------------------
+        decay_s = igc + (b_tot[:, None, :] - b)            # (B,W,H)
+        m_new = jnp.maximum(m + b_tot, jnp.max(decay_s, axis=1))
+        w_old = jnp.exp(m + b_tot - m_new)
+        w_src = jnp.exp(decay_s - m_new[:, None, :])
+        C_new = w_old[..., None, None] * C + \
+            jnp.einsum("bwh,bwhd,bwhe->bhde", w_src, kc, vc)
+        n_new = w_old[..., None] * n + jnp.einsum("bwh,bwhd->bhd", w_src, kc)
+        return (C_new, n_new, m_new), h_out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (cq, ck, cv, cig, cfgate))
+    (C, n, m), hs = lax.scan(chunk_step, (state.C, state.n, state.m), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    out = _head_norm(h, params["out_norm"]).astype(x.dtype)
+    out = (out * jax.nn.silu(z)) @ params["down_proj"]
+    if return_state:
+        new_conv = jnp.concatenate(
+            [state.conv.astype(u.dtype), u], axis=1)[:, -(_CONV - 1):, :]
+        return out, MLSTMState(C, n, m, new_conv)
+    return out
+
+
+def mlstm_decode_step(params, cfg: ModelConfig, x, state: MLSTMState):
+    """x: (B, D) -> (out (B, D), new state). Exact recurrent step."""
+    B, D = x.shape
+    u, z = _mlstm_up(params, x[:, None, :])                # (B,1,di)
+    xc = _conv_seq(params, u, state.conv)                  # conv window exact
+    q, k, v, ig, fg = _qkv_gates_from(params, cfg, u, xc)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                    # (B,H,hd) f32
+    ig, fg = ig[:, 0], fg[:, 0]                            # (B,H)
+    m_new = jnp.maximum(fg + state.m, ig)
+    fprime = jnp.exp(fg + state.m - m_new)
+    iprime = jnp.exp(ig - m_new)
+    C = fprime[..., None, None] * state.C + \
+        iprime[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = fprime[..., None] * state.n + iprime[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = num / den[..., None]                               # (B,H,hd)
+    hn = _head_norm(h[:, None], params["out_norm"])[:, 0].astype(x.dtype)
+    out = (hn * jax.nn.silu(z[:, 0])) @ params["down_proj"]
+    new_conv = jnp.concatenate(
+        [state.conv.astype(u.dtype), u], axis=1)[:, -(_CONV - 1):, :]
+    return out, MLSTMState(C, n, m_new, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    di = int(cfg.xlstm_proj_factor * D)
+    ks = jax.random.split(key, 7)
+    r_init = lambda kk: (jax.random.normal(kk, (H, hd, hd), jnp.float32)
+                         / math.sqrt(hd))
+    return {
+        "w_gates": dense_init(ks[0], D, 4 * D, dt),          # z,i,f,o stacked
+        "b_gates": jnp.concatenate([
+            jnp.zeros((2 * D,), jnp.float32),
+            jnp.full((D,), 3.0, jnp.float32),                # forget bias
+            jnp.zeros((D,), jnp.float32)]),
+        "r_z": r_init(ks[1]), "r_i": r_init(ks[2]),
+        "r_f": r_init(ks[3]), "r_o": r_init(ks[4]),
+        "out_norm": jnp.ones((D,), dt),
+        "up_proj": dense_init(ks[5], D, 2 * di, dt),
+        "down_proj": dense_init(ks[6], di, D, dt),
+    }
+
+
+def _slstm_cell(params, cfg: ModelConfig, wx_t, state: SLSTMState):
+    """One sLSTM step. wx_t: (B, 4D) precomputed input contribution."""
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    B = wx_t.shape[0]
+    hprev = state.h.reshape(B, H, hd)
+    rec = lambda R: jnp.einsum("bhd,hde->bhe", hprev, R).reshape(B, D)
+    z_in, i_in, f_in, o_in = jnp.split(
+        wx_t.astype(jnp.float32) + params["b_gates"], 4, axis=-1)
+    z = jnp.tanh(z_in + rec(params["r_z"]))
+    ig = i_in + rec(params["r_i"])                            # log-space
+    fg = jax.nn.log_sigmoid(f_in + rec(params["r_f"]))
+    o = jax.nn.sigmoid(o_in + rec(params["r_o"]))
+    m_new = jnp.maximum(fg + state.m, ig)
+    iprime = jnp.exp(ig - m_new)
+    fprime = jnp.exp(fg + state.m - m_new)
+    c = fprime * state.c + iprime * z
+    n = fprime * state.n + iprime
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    D = cfg.d_model
+    zero = jnp.zeros((batch, D), jnp.float32)
+    return SLSTMState(c=zero, n=zero, h=zero,
+                      m=jnp.full((batch, D), -jnp.inf, jnp.float32))
+
+
+def _slstm_out(params, cfg: ModelConfig, h_seq, x_dtype):
+    """Head-group norm + gated up/down FFN. h_seq: (B, S, D) f32."""
+    B, S, D = h_seq.shape
+    H = cfg.num_heads
+    hf = h_seq.reshape(B, S, H, D // H)
+    ms = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hn = (hf * lax.rsqrt(ms + 1e-6)).reshape(B, S, D)
+    hn = (hn * params["out_norm"].astype(jnp.float32)).astype(x_dtype)
+    u, g = jnp.split(hn @ params["up_proj"], 2, axis=-1)
+    return (activation(cfg.act)(g) * u) @ params["down_proj"]
+
+
+def slstm_forward(params, cfg: ModelConfig, x, state: SLSTMState | None = None,
+                  return_state: bool = False):
+    """Sequential sLSTM over a sequence. x: (B, S, D)."""
+    B, S, D = x.shape
+    wx = x @ params["w_gates"]                               # (B, S, 4D)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+
+    def step(st, wx_t):
+        st2 = _slstm_cell(params, cfg, wx_t, st)
+        return st2, st2.h
+
+    final, hs = lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h_seq = jnp.moveaxis(hs, 0, 1)                           # (B, S, D) f32
+    out = _slstm_out(params, cfg, h_seq, x.dtype)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode_step(params, cfg: ModelConfig, x, state: SLSTMState):
+    """x: (B, D) -> (out, new state)."""
+    wx = x @ params["w_gates"]
+    st = _slstm_cell(params, cfg, wx, state)
+    out = _slstm_out(params, cfg, st.h[:, None, :], x.dtype)[:, 0]
+    return out, st

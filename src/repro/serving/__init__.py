@@ -1,0 +1,8 @@
+"""Continuous-batching serving runtime."""
+from repro.serving.engine import Engine, EngineStats
+from repro.serving.request import Request, RequestStatus, SamplingParams
+from repro.serving.sampler import sample_tokens
+from repro.serving.scheduler import Scheduler
+
+__all__ = ["Engine", "EngineStats", "Request", "RequestStatus",
+           "SamplingParams", "sample_tokens", "Scheduler"]

@@ -1,0 +1,193 @@
+"""Continuous-batching serving engine (the vLLM-shaped runtime).
+
+Three compiled programs:
+  prefill : batch-1 prompt (padded to ``max_prompt_len``) -> per-slot cache
+  insert  : splice a prefilled single-request cache into the batch cache
+  decode  : one token for every active slot (static batch) + sampling
+
+The eviction policy is a constructor argument — the paper's PagedEviction,
+any baseline, or ``full``. Because every policy statically bounds the
+per-request slab, admission can never over-commit HBM (DESIGN.md §2).
+
+Telemetry per step: pages/tokens evicted, forced (fragmentation) evictions,
+wall time — the benchmarks build the paper's throughput/TPOT/overhead
+tables from these.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CacheConfig, ModelConfig
+from repro.core.policies import EvictionPolicy, get_policy
+from repro.models.transformer import (
+    ModelCache,
+    decode_step,
+    forward_prefill,
+    init_decode_caches,
+)
+from repro.serving.request import Request, RequestStatus, SamplingParams
+from repro.serving.sampler import sample_tokens
+from repro.serving.scheduler import Scheduler
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    pages_evicted: int = 0
+    tokens_evicted: int = 0
+    forced_evictions: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_generated / self.decode_s if self.decode_s else 0.0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, cache_cfg: CacheConfig,
+                 max_batch: int = 8, max_prompt_len: int = 256,
+                 max_new_tokens: int = 128, sampling: SamplingParams | None = None,
+                 use_pallas: bool = False, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ccfg = cache_cfg
+        self.policy: EvictionPolicy = get_policy(cache_cfg.policy)
+        self.max_batch = max_batch
+        self.max_prompt_len = max_prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.total_len = max_prompt_len + max_new_tokens
+        self.sampling = sampling or SamplingParams()
+        self.use_pallas = use_pallas
+        self.scheduler = Scheduler(max_batch)
+        self.stats = EngineStats()
+        self._key = jax.random.PRNGKey(seed)
+        self._next_id = 0
+
+        # batch-wide state
+        self.cache: ModelCache = init_decode_caches(
+            cfg, max_batch, self.total_len, self.policy, self.ccfg)
+        self.cur_tokens = np.zeros((max_batch,), np.int32)
+        self.active = np.zeros((max_batch,), bool)
+
+        self._prefill_fn = jax.jit(self._prefill_impl)
+        self._insert_fn = jax.jit(self._insert_impl, static_argnames=("slot",))
+        self._decode_fn = jax.jit(self._decode_impl)
+
+    # ---------------------------------------------------------------- jitted
+    def _prefill_impl(self, params, tokens, valid):
+        return forward_prefill(params, self.cfg, tokens, self.policy,
+                               self.ccfg, valid=valid,
+                               total_seq_hint=self.total_len,
+                               use_pallas=self.use_pallas)
+
+    def _insert_impl(self, batch_cache, single_cache, *, slot: int):
+        # pattern-slot leaves are stacked (R, B, ...): batch is axis 1;
+        # tail leaves and cur_pos have batch at axis 0.
+        def splice_b0(b, s):
+            return b.at[slot].set(s[0].astype(b.dtype))
+
+        def splice_b1(b, s):
+            return b.at[:, slot].set(s[:, 0].astype(b.dtype))
+
+        from repro.models.transformer import ModelCache
+        return ModelCache(
+            pattern=jax.tree.map(splice_b1, batch_cache.pattern,
+                                 single_cache.pattern),
+            tail=jax.tree.map(splice_b0, batch_cache.tail, single_cache.tail),
+            cur_pos=splice_b0(batch_cache.cur_pos, single_cache.cur_pos),
+        )
+
+    def _decode_impl(self, params, tokens, cache, active, key):
+        logits, cache = decode_step(params, self.cfg, tokens, cache,
+                                    self.policy, self.ccfg, active=active,
+                                    use_pallas=self.use_pallas)
+        s = self.sampling
+        next_tok = sample_tokens(key, logits, temperature=s.temperature,
+                                 top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
+        return next_tok, cache
+
+    # ------------------------------------------------------------------- api
+    def submit(self, prompt: np.ndarray, *, max_new_tokens: int | None = None,
+               eos_token_id: int | None = None) -> Request:
+        assert len(prompt) <= self.max_prompt_len, (
+            f"prompt len {len(prompt)} > max_prompt_len {self.max_prompt_len}")
+        req = Request(request_id=self._next_id,
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens or self.max_new_tokens,
+                      eos_token_id=eos_token_id)
+        self._next_id += 1
+        self.scheduler.add(req)
+        return req
+
+    def _admit(self) -> None:
+        for slot, req in self.scheduler.schedule():
+            t0 = time.perf_counter()
+            S = self.max_prompt_len
+            tokens = np.zeros((1, S), np.int32)
+            valid = np.zeros((1, S), bool)
+            n = len(req.prompt)
+            tokens[0, :n] = req.prompt
+            valid[0, :n] = True
+            logits, single = self._prefill_fn(self.params, jnp.asarray(tokens),
+                                              jnp.asarray(valid))
+            self.cache = self._insert_fn(self.cache, single, slot=slot)
+            s = self.sampling
+            self._key, sk = jax.random.split(self._key)
+            first = sample_tokens(sk, logits, temperature=s.temperature,
+                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
+            first_id = int(jax.device_get(first)[0])
+            req.output_tokens.append(first_id)
+            self.cur_tokens[slot] = first_id
+            self.active[slot] = True
+            req.status = RequestStatus.RUNNING
+            req.prefill_time = time.perf_counter() - t0
+            self.stats.prefill_s += req.prefill_time
+            self.stats.tokens_generated += 1
+            self._maybe_finish(req)
+
+    def _maybe_finish(self, req: Request) -> None:
+        last = req.output_tokens[-1] if req.output_tokens else None
+        if req.eos_token_id is not None and last == req.eos_token_id:
+            req.status = RequestStatus.FINISHED_STOPPED
+        elif req.num_generated >= req.max_new_tokens:
+            req.status = RequestStatus.FINISHED_LENGTH
+        if req.finished:
+            self.active[req.slot] = False
+            self.scheduler.retire(req)
+
+    def step(self) -> bool:
+        """One engine iteration: admit + one decode step. Returns whether
+        any work remains."""
+        self._admit()
+        if not self.active.any():
+            return self.scheduler.has_work()
+        t0 = time.perf_counter()
+        self._key, sk = jax.random.split(self._key)
+        next_tok, self.cache = self._decode_fn(
+            self.params, jnp.asarray(self.cur_tokens), self.cache,
+            jnp.asarray(self.active), sk)
+        next_np = np.asarray(jax.device_get(next_tok))
+        dt = time.perf_counter() - t0
+        self.stats.decode_s += dt
+        self.stats.steps += 1
+        for slot, req in self.scheduler.active():
+            req.output_tokens.append(int(next_np[slot]))
+            req.decode_times.append(dt)
+            self.cur_tokens[slot] = next_np[slot]
+            self.stats.tokens_generated += 1
+            self._maybe_finish(req)
+        return self.scheduler.has_work()
+
+    def run(self, max_steps: int = 100_000) -> list[Request]:
+        steps = 0
+        while self.step() and steps < max_steps:
+            steps += 1
+        return self.scheduler.finished

@@ -1,0 +1,47 @@
+"""Request lifecycle objects for the serving engine."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class RequestStatus(enum.Enum):
+    WAITING = "waiting"
+    PREFILLING = "prefilling"
+    RUNNING = "running"
+    FINISHED_STOPPED = "finished_stopped"     # hit EOS
+    FINISHED_LENGTH = "finished_length"       # hit max_new_tokens
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0            # 0 = no top-k
+    top_p: float = 1.0        # 1.0 = no nucleus
+    greedy: bool = True
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                      # (S,) int32 token ids
+    max_new_tokens: int = 64
+    eos_token_id: int | None = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+
+    status: RequestStatus = RequestStatus.WAITING
+    output_tokens: list[int] = field(default_factory=list)
+    slot: int = -1                          # engine batch slot while active
+    prefill_time: float = 0.0
+    decode_times: list[float] = field(default_factory=list)
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output_tokens)
+
+    @property
+    def finished(self) -> bool:
+        return self.status in (RequestStatus.FINISHED_STOPPED,
+                               RequestStatus.FINISHED_LENGTH)

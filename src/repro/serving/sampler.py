@@ -1,0 +1,30 @@
+"""Token sampling: greedy / temperature / top-k / top-p, batched + jittable."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(key, logits, *, temperature: float = 1.0, top_k: int = 0,
+                  top_p: float = 1.0, greedy: bool = False):
+    """logits: (B, V) -> (B,) int32.
+
+    Static sampling config (jit recompiles per config, which is what a
+    serving engine wants: one compiled step per sampling class).
+    """
+    if greedy or temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    B, V = logits.shape
+    if top_k and top_k < V:
+        kth = jax.lax.top_k(logits, top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,61 @@
+"""FIFO continuous-batching scheduler.
+
+Keeps a waiting queue and a fixed number of batch slots (the jitted decode
+step has a static batch). A waiting request is admitted whenever a slot
+frees up; its prompt is prefilled into that slot's paged cache. This is
+the vLLM scheduling shape minus preemption (the eviction policies bound
+per-request cache statically, so admission can never over-commit memory —
+a property vLLM has to enforce dynamically; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from repro.serving.request import Request, RequestStatus
+
+
+class Scheduler:
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.waiting: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_batch
+        self.finished: list[Request] = []
+
+    # ------------------------------------------------------------------ api
+    def add(self, req: Request) -> None:
+        req.status = RequestStatus.WAITING
+        self.waiting.append(req)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def schedule(self) -> list[tuple[int, Request]]:
+        """Admit waiting requests into free slots (FIFO). Returns the newly
+        admitted (slot, request) pairs — the engine prefills these."""
+        admitted = []
+        for slot in self.free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.popleft()
+            req.slot = slot
+            req.status = RequestStatus.PREFILLING
+            self.slots[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def active(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.status == RequestStatus.RUNNING]
+
+    def retire(self, req: Request) -> None:
+        assert req.finished
+        self.slots[req.slot] = None
+        req.slot = -1
+        self.finished.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.num_active > 0

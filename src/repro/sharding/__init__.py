@@ -1,0 +1,15 @@
+"""Sharding rules for params / caches / batches over the production mesh."""
+from repro.sharding.rules import (
+    activation_constraint,
+    batch_axes,
+    cache_shardings,
+    data_shardings,
+    opt_shardings,
+    param_shardings,
+    replicated,
+)
+
+__all__ = [
+    "activation_constraint", "batch_axes", "cache_shardings",
+    "data_shardings", "opt_shardings", "param_shardings", "replicated",
+]

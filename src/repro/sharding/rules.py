@@ -1,0 +1,317 @@
+"""Logical-axis sharding rules (MaxText-style, divisibility-checked).
+
+Rules map parameter/cache/batch leaves to PartitionSpecs by key-path name +
+shape. Every rule verifies the dimension divides the mesh axis size and
+falls back to replication otherwise (GQA kv_heads < model axis, xLSTM's 4
+heads, batch=1 long-context decode, ...). The dry-run then reports what the
+compiler actually did — the §Perf loop iterates on these rules.
+
+Baseline scheme (documented in DESIGN.md §5):
+  batch dims            -> ("pod", "data") when divisible (pod folds into DP)
+  attention q heads     -> "model" (head-granular: requires H % model == 0)
+  kv heads              -> "model" iff KV % model == 0, else replicated
+  ffn hidden / d_inner  -> "model" (Megatron column/row split)
+  vocab (embed/head)    -> "model"
+  MoE experts           -> tensor-split per expert (d_ff over "model");
+                           expert-parallel is the hillclimb variant
+  norms, biases, gates  -> replicated
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, *names: str) -> int:
+    return int(np.prod([mesh.shape[n] for n in names if n in mesh.shape]))
+
+
+def batch_axes(mesh: Mesh, batch: int):
+    """Largest data-parallel axis tuple that divides ``batch``."""
+    if "pod" in mesh.shape and batch % _axis_size(mesh, "pod", "data") == 0:
+        return ("pod", "data")
+    if batch % _axis_size(mesh, "data") == 0:
+        return "data"
+    return None
+
+
+def model_axes(mesh: Mesh):
+    """The tensor-parallel axis (or axes): "model" on the standard mesh, the
+    combined ("expert","tp") pair on the expert-parallel mesh layout."""
+    if "model" in mesh.shape:
+        return "model"
+    if "expert" in mesh.shape:
+        return ("expert", "tp")
+    return None
+
+
+def _ma_size(mesh: Mesh) -> int:
+    ma = model_axes(mesh)
+    if ma is None:
+        return 1
+    return _axis_size(mesh, *(ma if isinstance(ma, tuple) else (ma,)))
+
+
+def _model_ok(mesh: Mesh, dim: int) -> bool:
+    m = _ma_size(mesh)
+    return m > 1 and dim % m == 0
+
+
+def _path_str(path) -> str:
+    def seg(p):
+        for attr in ("key", "idx", "name"):
+            v = getattr(p, attr, None)
+            if v is not None:
+                return str(v)
+        return str(p).strip(".")
+    return "/".join(seg(p) for p in path)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_spec(mesh: Mesh, cfg, path: str, shape: tuple) -> P:
+    m = lambda d: _model_ok(mesh, shape[d])
+    name = path.rsplit("/", 1)[-1]
+    # strip the stacked-repetition leading dim for pattern slots
+    stacked = path.startswith("pattern/")
+    off = 1 if stacked and len(shape) > 0 else 0
+
+    def spec(*dims):
+        full = (None,) * off + dims
+        full = full + (None,) * (len(shape) - len(full))
+        return P(*full)
+
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    msz = _ma_size(mesh)
+    MA = model_axes(mesh)
+
+    if name in ("embed", "lm_head"):
+        # (V, D) or (K, V, D): shard vocab
+        vdim = len(shape) - 2
+        if _model_ok(mesh, shape[vdim]):
+            return P(*([None] * vdim + [MA, None]))
+        return P()
+    if name in ("wq", "wk", "wv") and "mlstm" in path:
+        # mLSTM inner (di, di) projections: row-split — the input xc is
+        # di-sharded, so contracting the sharded dim costs one bf16 psum
+        # instead of replicated-weight f32 ARs (§Perf xlstm iteration)
+        return spec(MA, None) if m(off + 0) else spec()
+    if name == "wq":
+        return spec(None, MA) if H % msz == 0 and m(off + 1) else spec()
+    if name in ("wk", "wv"):
+        return spec(None, MA) if KV % msz == 0 and m(off + 1) else spec()
+    if name == "wo":
+        return spec(MA, None) if H % msz == 0 and m(off + 0) else spec()
+    E = cfg.num_experts
+    ep = "expert" in mesh.shape and E and E % mesh.shape["expert"] == 0
+    if name in ("w_gate", "w_up"):
+        if len(shape) - off == 3:      # MoE (E, D, F)
+            if ep and shape[off + 2] % mesh.shape["tp"] == 0:
+                return spec("expert", None, "tp")   # expert-parallel layout
+            return spec(None, None, MA) if m(off + 2) else spec()
+        return spec(None, MA) if m(off + 1) else spec()
+    if name == "w_down":
+        if len(shape) - off == 3:      # MoE (E, F, D)
+            if ep and shape[off + 1] % mesh.shape["tp"] == 0:
+                return spec("expert", "tp", None)
+            return spec(None, MA, None) if m(off + 1) else spec()
+        return spec(MA, None) if m(off + 0) else spec()
+    if name in ("in_proj", "up_proj", "dt_proj", "w_gates"):
+        return spec(None, MA) if m(off + 1) else spec()
+    if name in ("out_proj", "down_proj", "x_proj"):
+        return spec(MA, None) if m(off + 0) else spec()
+    if name == "conv_w":               # (dc, di)
+        return spec(None, MA) if m(off + 1) else spec()
+    if name in ("A_log",):             # (di, ds)
+        return spec(MA, None) if m(off + 0) else spec()
+    if name in ("D", "dt_bias", "conv_b"):   # (di,)
+        return spec(MA) if m(off + 0) else spec()
+    # everything else (norms, biases, router, gates, recurrent mats): replicate
+    return P()
+
+
+def param_shardings(mesh: Mesh, cfg, params_shape) -> Any:
+    """PartitionSpec pytree for a params pytree (of arrays or ShapeDtypes)."""
+    def rule(path, leaf):
+        spec = _param_spec(mesh, cfg, _path_str(path), tuple(leaf.shape))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# cache / state rules
+# ---------------------------------------------------------------------------
+
+def _cache_spec(mesh: Mesh, cfg, path: str, shape: tuple, batch: int) -> P:
+    b = batch_axes(mesh, batch)
+    name = path.rsplit("/", 1)[-1]
+    stacked = path.startswith("pattern/")
+    off = 1 if stacked else 0
+    rest = shape[off:]
+
+    def spec(*dims):
+        full = (None,) * off + dims
+        full = full + (None,) * (len(shape) - len(full))
+        return P(*full)
+
+    msz = _ma_size(mesh)
+    MA = model_axes(mesh)
+    kv_div = msz > 1 and cfg.num_kv_heads % msz == 0
+    if name in ("k", "v") and len(rest) == 5:
+        # paged slab (B, P, page, KV, hd): shard kv heads when divisible;
+        # else shard the PAGE dim over "model" — decode context parallelism
+        # (each model shard holds 1/msz of the pages; softmax combines via
+        # small collectives). vLLM replicates KV when kv < tp — on TPU the
+        # page dim is the better axis (DESIGN.md §5).
+        if kv_div:
+            return spec(b, None, None, MA, None)
+        if rest[1] % msz == 0 and msz > 1:
+            return spec(b, MA, None, None, None)
+        return spec(b, None, None, None, None)
+    if name in ("k", "v") and len(rest) == 4:
+        # static cross-attn KV (B, Sc, KV, hd)
+        return spec(b, None, MA if kv_div else None, None)
+    if name in ("k_scale", "v_scale") and len(rest) == 4:
+        # (B, P, page, KV): follow the slab's sharding choice
+        if kv_div:
+            return spec(b, None, None, MA)
+        if rest[1] % msz == 0 and msz > 1:
+            return spec(b, MA, None, None)
+        return spec(b, None, None, None)
+    if name in ("pos", "score") and len(rest) == 3:
+        # follow the slab's page-dim sharding to avoid per-step resharding
+        if not kv_div and rest[1] % msz == 0 and msz > 1:
+            return spec(b, MA, None)
+        return spec(b, None, None)
+    if name in ("cur_page", "cur_off", "cur_pos"):
+        return spec(b)
+    if name == "conv":                 # (B, dc-1, di)
+        di = rest[2] if len(rest) == 3 else 0
+        return spec(b, None, MA if _model_ok(mesh, di) else None)
+    if name == "ssm":                  # (B, di, ds)
+        return spec(b, MA if _model_ok(mesh, rest[1]) else None, None)
+    if name == "C":                    # mLSTM (B, H, hd, hd)
+        hd = rest[2]
+        return spec(b, None, MA if _model_ok(mesh, hd) else None, None)
+    if name == "n" and len(rest) == 3:  # mLSTM normalizer (B, H, hd)
+        hd = rest[-1]
+        return spec(b, None, MA if _model_ok(mesh, hd) else None)
+    if name == "m" and len(rest) == 2 and rest[1] <= 128:  # mLSTM (B, H)
+        return spec(b, None)
+    if name in ("c", "h", "n", "m") and len(rest) == 2:    # sLSTM (B, D)
+        return spec(b, MA if _model_ok(mesh, rest[1]) else None)
+    # fall back: shard batch only
+    return spec(b)
+
+
+def cache_shardings(mesh: Mesh, cfg, cache_shape, batch: int) -> Any:
+    def rule(path, leaf):
+        spec = _cache_spec(mesh, cfg, _path_str(path), tuple(leaf.shape), batch)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / misc
+# ---------------------------------------------------------------------------
+
+def data_shardings(mesh: Mesh, batch_tree) -> Any:
+    """Shard every leaf's leading (batch) dim over the DP axes."""
+    def rule(leaf):
+        b = batch_axes(mesh, leaf.shape[0]) if leaf.ndim else None
+        return NamedSharding(mesh, P(*((b,) + (None,) * (leaf.ndim - 1)))
+                             if leaf.ndim else P())
+    return jax.tree.map(rule, batch_tree)
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def opt_shardings(mesh: Mesh, cfg, opt_shape, params_shardings,
+                  zero1: bool = False) -> Any:
+    """Optimizer moments mirror parameter shardings; step is replicated.
+
+    ``zero1``: additionally shard each moment over the ``data`` axis on the
+    first replicated dimension that divides it (ZeRO-1 — the f32 moments are
+    the dominant training-memory term for the 100B+ configs)."""
+    from repro.training.optimizer import AdamWState
+
+    def zshard(sh_leaf, shape_leaf):
+        ndim = len(shape_leaf.shape)
+        spec = list(sh_leaf.spec) + [None] * (ndim - len(sh_leaf.spec))
+        dsz = _axis_size(mesh, "data")
+        for i in range(ndim):
+            if spec[i] is None and dsz > 1 and shape_leaf.shape[i] % dsz == 0 \
+                    and shape_leaf.shape[i] >= dsz:
+                spec[i] = "data"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    if not zero1:
+        return AdamWState(step=NamedSharding(mesh, P()),
+                          mu=params_shardings, nu=params_shardings)
+    mu = jax.tree.map(zshard, params_shardings, opt_shape.mu)
+    nu = jax.tree.map(zshard, params_shardings, opt_shape.nu)
+    return AdamWState(step=NamedSharding(mesh, P()), mu=mu, nu=nu)
+
+
+def activation_constraint(mesh: Mesh, batch: int, seq_parallel: bool = False):
+    """Returns an ``ac`` callable for forward passes: pins layer inputs
+    (B, S, D) / (B, D) to batch-sharded, replicated elsewhere (baseline).
+
+    ``seq_parallel``: Megatron-style sequence parallelism — layer inputs
+    (B, S, D) additionally shard S over "model". Norms are per-token so the
+    sharded region is free; GSPMD materializes the all-gather entering each
+    mixer and the reduce-scatter after its output projection (the classic
+    AG+RS replacement of the residual-stream ARs), and the remat-saved
+    per-rep activations shrink by the model-axis factor.
+
+    The callable also exposes two stronger pins used inside recurrent /
+    expert modules, where GSPMD propagation through moveaxis/scan
+    boundaries otherwise drops the sharding entirely (measured: a
+    replicated (S, B, d_inner) f32 scan input costs 268 GB/device on
+    jamba train — §Perf jamba iter 5):
+
+      ac.inner(x)  (B, ..., C) -> batch on dim0, C on "model" if divisible
+      ac.time(x)   (S, B, ..., C) -> batch on dim1, C on "model" if divisible
+    """
+    b = batch_axes(mesh, batch)
+    msz = _ma_size(mesh)
+    MA = model_axes(mesh)
+
+    def _pin(x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def ac(x):
+        if seq_parallel and x.ndim >= 3 and msz > 1 and x.shape[1] % msz == 0:
+            return _pin(x, P(*((b, MA) + (None,) * (x.ndim - 2))))
+        return _pin(x, P(*((b,) + (None,) * (x.ndim - 1))))
+
+    def inner(x):
+        last = MA if (msz > 1 and x.shape[-1] % msz == 0) else None
+        return _pin(x, P(*((b,) + (None,) * (x.ndim - 2) + (last,))))
+
+    def time(x):
+        last = MA if (msz > 1 and x.shape[-1] % msz == 0) else None
+        return _pin(x, P(*((None, b) + (None,) * (x.ndim - 3) + (last,))))
+
+    ac.inner = inner
+    ac.time = time
+    ac.mesh = mesh
+    ac.batch_axes = b
+    return ac
+
+
+def pin_inner(ac):
+    """Module-side helper: the strong inner pin if ``ac`` provides one."""
+    return getattr(ac, "inner", None) or (lambda x: x)
+
+
+def pin_time(ac):
+    return getattr(ac, "time", None) or (lambda x: x)

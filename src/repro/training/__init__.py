@@ -1,0 +1,35 @@
+"""Training substrate: optimizer, step, data, checkpointing."""
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    global_norm,
+    init_adamw,
+    lr_schedule,
+)
+from repro.training.train_step import (
+    cross_entropy,
+    loss_fn,
+    make_train_step,
+    train_step,
+)
+from repro.training.data import (
+    DataConfig,
+    lm_batch,
+    lm_batches,
+    recall_batch,
+    recall_batches,
+    recall_example,
+)
+from repro.training.checkpoint import (
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_update", "global_norm", "init_adamw",
+    "lr_schedule", "cross_entropy", "loss_fn", "make_train_step", "train_step",
+    "DataConfig", "lm_batch", "lm_batches", "recall_batch", "recall_batches",
+    "recall_example", "latest_step", "load_checkpoint", "save_checkpoint",
+]

@@ -1,0 +1,65 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary pytrees.
+
+No orbax offline — this implements the same contract: atomic save (write to
+tmp then rename), step-indexed directories, latest-step discovery, and
+exact pytree restore (structure from a saved keypath manifest).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, name: str = "state") -> str:
+    """Atomic save of ``tree`` under <ckpt_dir>/step_<step>/<name>.npz."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=step_dir, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    # np.savez appends .npz when the name lacks it; prefer that artifact
+    produced = tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp
+    final = os.path.join(step_dir, f"{name}.npz")
+    os.replace(produced, final)
+    if os.path.exists(tmp):
+        os.remove(tmp)
+    with open(os.path.join(step_dir, f"{name}.keys.json"), "w") as f:
+        json.dump(sorted(flat.keys()), f)
+    return final
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like, name: str = "state"):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(step_dir, f"{name}.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None

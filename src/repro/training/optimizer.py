@@ -1,0 +1,111 @@
+"""Hand-rolled AdamW + schedules (no optax in this environment).
+
+Optimizer state is a pytree mirroring params (f32 master copies of moments);
+``adamw_update`` is pure and shard-transparent under pjit. ZeRO-1 style
+optimizer-state sharding along ``data`` is applied at the launcher level by
+sharding the state pytree (see repro.sharding.rules.optimizer_sharding).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # () int32
+    mu: Any              # first moment (f32, like params)
+    nu: Any              # second moment (f32)
+
+
+class AdamWConfig(NamedTuple):
+    lr_peak: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to lr_min_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_peak * (cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) *
+                         0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _decay_mask(path: tuple) -> bool:
+    """Weight decay on matrices only — not on norms, biases, or gate biases."""
+    last = str(path[-1]) if path else ""
+    no_decay = ("norm", "bias", "scale", "b_gates", "b_igate", "b_fgate",
+                "bq", "bk", "bv", "dt_bias", "A_log", "D", "conv_b")
+    return not any(t in last for t in no_decay)
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig,
+                 moment_shardings=None):
+    """Returns (new_params, new_state, metrics).
+
+    ``moment_shardings``: optional pytree of NamedSharding matching the
+    moments (ZeRO-1). When given, the f32 gradient/update math is pinned to
+    the moment sharding — the grads are reduce-scattered over the data
+    axis, all optimizer arithmetic runs on 1/N-sized shards, and only the
+    final (cast-back) update is all-gathered into the parameter sharding.
+    Without this, the f32 temporaries are param-sharded and dominate
+    training peak memory on 100B+ models (§Perf jamba iter 4)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat_p[0]]
+    treedef = flat_p[1]
+    p_leaves = [v for _, v in flat_p[0]]
+    g_leaves = jax.tree.leaves(grads)
+    mu_leaves = jax.tree.leaves(state.mu)
+    nu_leaves = jax.tree.leaves(state.nu)
+    sh_leaves = (jax.tree.leaves(moment_shardings)
+                 if moment_shardings is not None else [None] * len(p_leaves))
+
+    new_p, new_mu, new_nu = [], [], []
+    for path, p, g, mu, nu, sh in zip(paths, p_leaves, g_leaves, mu_leaves,
+                                      nu_leaves, sh_leaves):
+        gf = g.astype(jnp.float32) * clip
+        if sh is not None:
+            gf = jax.lax.with_sharding_constraint(gf, sh)
+        mu2 = cfg.beta1 * mu + (1 - cfg.beta1) * gf
+        nu2 = cfg.beta2 * nu + (1 - cfg.beta2) * jnp.square(gf)
+        upd = (mu2 / b1c) / (jnp.sqrt(nu2 / b2c) + cfg.eps)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+
+    unflatten = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return unflatten(new_p), AdamWState(step=step, mu=unflatten(new_mu),
+                                        nu=unflatten(new_nu)), metrics

@@ -1,0 +1,56 @@
+"""Training step: next-token cross-entropy + MoE load-balance aux loss."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward_train
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update
+
+Identity = lambda x: x
+
+
+def cross_entropy(logits, targets, mask):
+    """logits: (B, S, [K,] V); targets: (B, S) or (B, K, S); mask: (B, S)."""
+    if logits.ndim == 4:                    # audio: (B, S, K, V)
+        targets = jnp.moveaxis(targets, 1, 2)   # (B, S, K)
+        mask = mask[..., None]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, aux_weight: float = 0.01,
+            ac: Callable = Identity, cond=None):
+    logits, aux = forward_train(params, cfg, batch["tokens"], cond=cond, ac=ac)
+    ce = cross_entropy(logits, batch["targets"], batch["mask"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def train_step(params, opt_state: AdamWState, batch, *, cfg: ModelConfig,
+               opt_cfg: AdamWConfig, aux_weight: float = 0.01,
+               ac: Callable = Identity, cond=None, moment_shardings=None):
+    """One optimizer step. Pure; jit/pjit at the call site."""
+    (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch, aux_weight=aux_weight, ac=ac, cond=cond)
+    params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                         moment_shardings=moment_shardings)
+    metrics = {"loss": loss, **parts, **om}
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    aux_weight: float = 0.01, ac: Callable = Identity,
+                    moment_shardings=None):
+    """Returns a (params, opt_state, batch) -> (params, opt_state, metrics)
+    closure suitable for jax.jit / pjit with shardings. Pass the ZeRO-1
+    ``moment_shardings`` (rules.opt_shardings(..., zero1=True).mu) to pin
+    optimizer math to the data-sharded moments."""
+    return partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                   aux_weight=aux_weight, ac=ac,
+                   moment_shardings=moment_shardings)

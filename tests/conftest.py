@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device by
+design; only launch/dryrun.py requests 512 placeholder devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def small_ccfg():
+    return CacheConfig(page_size=8, cache_budget=32, policy="paged_eviction",
+                       dtype="float32")
+
+
+def make_kv(key, B=2, S=40, KV=2, hd=16, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    k = jax.random.normal(k1, (B, S, KV, hd), dtype)
+    v = jax.random.normal(k2, (B, S, KV, hd), dtype)
+    return k, v

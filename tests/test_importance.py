@@ -1,0 +1,57 @@
+"""Unit tests for the paper's importance proxies (Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import importance
+
+
+def test_vk_ratio_matches_manual():
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (3, 7, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (3, 7, 2, 16))
+    s = importance.vk_ratio_score(k, v)
+    kn = jnp.mean(jnp.linalg.norm(k, axis=-1), axis=-1)
+    vn = jnp.mean(jnp.linalg.norm(v, axis=-1), axis=-1)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(vn / kn), rtol=1e-5)
+
+
+def test_vk_ratio_monotone_in_value_norm():
+    """Scaling V up must increase importance; scaling K up must decrease."""
+    key = jax.random.PRNGKey(1)
+    k = jax.random.normal(key, (4, 10, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (4, 10, 2, 8))
+    base = importance.vk_ratio_score(k, v)
+    assert bool(jnp.all(importance.vk_ratio_score(k, 2.0 * v) > base))
+    assert bool(jnp.all(importance.vk_ratio_score(2.0 * k, v) < base))
+
+
+def test_inverse_key_l2_prefers_low_norm():
+    k = jnp.stack([jnp.ones((1, 2, 8)), 3.0 * jnp.ones((1, 2, 8))], axis=1)
+    s = importance.inverse_key_l2_score(k)          # (1, 2)
+    assert float(s[0, 0]) > float(s[0, 1])
+
+
+def test_keydiff_penalizes_mean_aligned_keys():
+    mean = jnp.ones((1, 1, 1, 8))
+    aligned = jnp.ones((1, 1, 1, 8))
+    ortho = jnp.concatenate([jnp.ones((1, 1, 1, 4)), -jnp.ones((1, 1, 1, 4))],
+                            axis=-1)
+    k = jnp.concatenate([aligned, ortho], axis=1)   # (1, 2, 1, 8)
+    s = importance.keydiff_score(k, mean)
+    assert float(s[0, 0]) < float(s[0, 1])
+
+
+def test_block_scores_mean_and_empty():
+    ts = jnp.asarray([[1.0, 3.0, 5.0, 7.0]])
+    valid = jnp.asarray([[True, True, False, False]])
+    bs = importance.block_scores_from_token_scores(ts, valid, page_size=2)
+    assert float(bs[0, 0]) == 2.0
+    assert np.isinf(np.asarray(bs)[0, 1])
+
+
+def test_scores_finite_on_degenerate_inputs():
+    z = jnp.zeros((2, 5, 2, 8))
+    assert bool(jnp.isfinite(importance.vk_ratio_score(z, z)).all())
+    assert bool(jnp.isfinite(importance.keydiff_score(z, z)).all())

@@ -1,0 +1,96 @@
+"""Unit tests for the functional paged KV cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import paged_cache as pc
+
+
+def _cache(B=2, P=4, page=4, KV=2, hd=8):
+    return pc.init_layer_cache(B, P, page, KV, hd, jnp.float32)
+
+
+def test_write_token_places_at_head():
+    c = _cache()
+    B, KV, hd = 2, 2, 8
+    k = jnp.ones((B, KV, hd))
+    v = 2 * jnp.ones((B, KV, hd))
+    c = pc.write_token(c, k, v, jnp.array([0, 0]), jnp.array([1.0, 2.0]))
+    assert int(c.cur_off[0]) == 1
+    np.testing.assert_array_equal(np.asarray(c.pos[:, 0, 0]), [0, 0])
+    assert float(c.score[1, 0, 0]) == 2.0
+    assert int(c.total_valid()[0]) == 1
+
+
+def test_write_token_respects_active_mask():
+    c = _cache()
+    k = jnp.ones((2, 2, 8))
+    c = pc.write_token(c, k, k, jnp.array([5, 5]), jnp.zeros(2),
+                       active=jnp.array([True, False]))
+    assert int(c.total_valid()[0]) == 1
+    assert int(c.total_valid()[1]) == 0
+    assert int(c.cur_off[1]) == 0
+
+
+def test_page_scores_mean_and_inf_for_empty():
+    c = _cache()
+    for i in range(4):
+        c = pc.write_token(c, jnp.ones((2, 2, 8)), jnp.ones((2, 2, 8)),
+                           jnp.full((2,), i), jnp.full((2,), float(i)))
+    ps = np.asarray(c.page_scores())
+    assert np.allclose(ps[:, 0], 1.5)              # mean(0,1,2,3)
+    assert np.isinf(ps[:, 1:]).all()
+
+
+def test_evict_page_and_reuse():
+    c = _cache()
+    for i in range(4):
+        c = pc.write_token(c, jnp.ones((2, 2, 8)), jnp.ones((2, 2, 8)),
+                           jnp.full((2,), i), jnp.zeros(2))
+    c = pc.evict_page(c, jnp.array([0, 0]))
+    assert int(c.total_valid()[0]) == 0
+    idx, exists = pc.find_free_page(c)
+    assert bool(exists.all())
+    c = pc.start_new_page(c, idx)
+    assert int(c.cur_off[0]) == 0
+
+
+def test_evict_token_flat_index():
+    c = _cache()
+    for i in range(6):                              # fills page0 + 2 of page1
+        c = pc.write_token(c, jnp.ones((2, 2, 8)), jnp.ones((2, 2, 8)),
+                           jnp.full((2,), i), jnp.zeros(2))
+        out = c
+        if int(c.cur_off[0]) == c.page_size:
+            c = pc.start_new_page(c, jnp.array([1, 1]))
+    c = pc.evict_token(c, jnp.array([2, 5]))        # page0/off2 ; page1/off1
+    pos = np.asarray(c.pos)
+    assert pos[0, 0, 2] == -1 and pos[1, 1, 1] == -1
+    assert int(c.total_valid()[0]) == 5
+
+
+def test_to_contiguous_roundtrip():
+    c = _cache()
+    for i in range(4):
+        c = pc.write_token(c, jnp.full((2, 2, 8), float(i)),
+                           jnp.full((2, 2, 8), float(i)),
+                           jnp.full((2,), i), jnp.zeros(2))
+    k, v, pos, mask = pc.to_contiguous(c)
+    assert k.shape == (2, 16, 2, 8)
+    assert int(mask.sum()) == 8
+    got = sorted(np.asarray(pos[0])[np.asarray(mask[0])].tolist())
+    assert got == [0, 1, 2, 3]
+
+
+def test_write_prompt_pages_layout():
+    c = _cache(P=4, page=4)
+    C = 8
+    k = jnp.arange(2 * C * 2 * 8, dtype=jnp.float32).reshape(2, C, 2, 8)
+    pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (2, C))
+    score = jnp.ones((2, C))
+    c = pc.write_prompt_pages(c, k, k, pos, score)
+    assert int(c.cur_page[0]) == 2 and int(c.cur_off[0]) == 0
+    assert int(c.total_valid()[0]) == C
+    np.testing.assert_array_equal(np.asarray(c.pos[0, 0]), [0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(c.pos[0, 1]), [4, 5, 6, 7])
+    assert np.isinf(np.asarray(c.page_scores())[0, 2:]).all()

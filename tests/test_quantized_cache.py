@@ -1,0 +1,98 @@
+"""int8 quantized paged cache (beyond-paper extension) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.core import decode_append, get_policy, init_layer_cache
+from repro.core.paged_cache import quantize_absmax, write_prompt_pages
+from repro.kernels import ops
+from repro.models import decode_step, forward_prefill, init_model, make_inputs
+from repro.models.attention import paged_attention_ref
+
+
+def test_quantize_roundtrip_error_bounded():
+    for seed in range(3):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (2, 7, 3, 32)) * 3.0
+        q, s = quantize_absmax(x)
+        back = q.astype(jnp.float32) * (s / 127.0)[..., None]
+        # absmax int8: error <= scale/127 per element
+        bound = np.asarray(s)[..., None] / 127.0 * 0.5 + 1e-6
+        assert (np.abs(np.asarray(back - x)) <= bound + 1e-5).all()
+
+
+def test_quantized_cache_write_and_dequant():
+    B, P, page, KV, hd = 2, 3, 4, 2, 16
+    c = init_layer_cache(B, P, page, KV, hd, "int8")
+    assert c.quantized and c.k.dtype == jnp.int8
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, 8, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (B, 8))
+    c = write_prompt_pages(c, k, k, pos, jnp.ones((B, 8)))
+    kd = c.k_dequant().reshape(B, P * page, KV, hd)[:, :8]
+    rel = float(jnp.abs(kd - k).max() / jnp.abs(k).max())
+    assert rel < 0.02
+
+
+def test_quantized_attention_close_to_fp():
+    B, P, page, KV, hd, G = 2, 4, 16, 2, 128, 4
+    kk = jax.random.normal(jax.random.PRNGKey(1), (B, 64, KV, hd))
+    vv = jax.random.normal(jax.random.PRNGKey(2), (B, 64, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32), (B, 64))
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, KV * G, hd))
+    cur = jnp.full((B,), 63, jnp.int32)
+    ones = jnp.ones((B, 64))
+    c8 = write_prompt_pages(init_layer_cache(B, P, page, KV, hd, "int8"),
+                            kk, vv, pos, ones)
+    cf = write_prompt_pages(init_layer_cache(B, P, page, KV, hd, "float32"),
+                            kk, vv, pos, ones)
+    o8 = np.asarray(paged_attention_ref(q, c8, cur_pos=cur))
+    of = np.asarray(paged_attention_ref(q, cf, cur_pos=cur))
+    assert np.abs(o8 - of).max() / np.abs(of).max() < 0.05
+
+
+def test_int8_pallas_kernel_matches_ref():
+    B, P, page, KV, hd, G = 2, 3, 16, 2, 128, 2
+    kk = jax.random.normal(jax.random.PRNGKey(1), (B, 48, KV, hd))
+    vv = jax.random.normal(jax.random.PRNGKey(2), (B, 48, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(48, dtype=jnp.int32), (B, 48))
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, KV * G, hd))
+    c8 = write_prompt_pages(init_layer_cache(B, P, page, KV, hd, "int8"),
+                            kk, vv, pos, jnp.ones((B, 48)))
+    for cur_val, w in ((47, 0), (30, 0), (47, 16)):
+        cur = jnp.full((B,), cur_val, jnp.int32)
+        a = np.asarray(ops.paged_attention(q, c8, cur_pos=cur, window=w))
+        b = np.asarray(paged_attention_ref(q, c8, cur_pos=cur, window=w))
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("policy", ["paged_eviction", "full", "streaming_llm",
+                                    "keydiff"])
+def test_int8_end_to_end_decode(policy):
+    """Whole model prefill+decode with a quantized cache stays finite and
+    respects the budget for every policy (incl. keydiff's dequantized
+    global rescoring)."""
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    pol = get_policy(policy)
+    ccfg = CacheConfig(page_size=8, cache_budget=32, policy=policy,
+                       dtype="int8")
+    inp = make_inputs(jax.random.PRNGKey(1), cfg, 2, 48)
+    lg, cache = forward_prefill(params, cfg, inp["tokens"], pol, ccfg,
+                                total_seq_hint=64)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    for _ in range(10):
+        lg, cache = decode_step(params, cfg, tok, cache, pol, ccfg)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    assert bool(jnp.isfinite(lg).all())
+    kv = jax.tree.map(lambda a: a[0], cache.pattern[0].kv)
+    if policy != "full":
+        assert int(kv.total_valid().max()) <= 32 + 8
+
+
+def test_int8_memory_is_half():
+    c8 = init_layer_cache(2, 4, 16, 2, 128, "int8")
+    cf = init_layer_cache(2, 4, 16, 2, 128, jnp.bfloat16)
+    b8 = sum(a.size * a.dtype.itemsize for a in [c8.k, c8.v, c8.k_scale, c8.v_scale])
+    bf = sum(a.size * a.dtype.itemsize for a in [cf.k, cf.v])
+    assert b8 / bf < 0.54, (b8, bf)

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the paper's system-level claims.
+
+Each test is an executable version of a claim from the paper:
+  C1  eviction frequency: PagedEviction does ~1/page_size the eviction work
+      of token-per-step baselines (Limitation 4 / throughput claim)
+  C2  memory: the budget bounds the live cache for every eviction policy
+      while full cache grows linearly (the memory claim)
+  C3  block structure: PagedEviction keeps pages uniformly full; unstructured
+      baselines fragment (Limitation 1, Figs. 5/6)
+  C4  the mechanism end-to-end stays finite and budget-true through the
+      serving engine (the accuracy ordering itself — Fig. 2 proxy — is
+      measured in benchmarks/accuracy.py on a trained tiny model)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.core import decode_append, get_policy, init_layer_cache
+from repro.models import init_model
+from repro.serving import Engine
+
+
+def _trace_outcomes(policy, steps=64, budget=16, page=4):
+    pol = get_policy(policy)
+    cfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                      dtype="float32")
+    cache = init_layer_cache(1, pol.slab_pages(cfg, steps), page, 1, 8,
+                             jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    n_evictions = 0
+    for t in range(steps):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        out = decode_append(cache, jax.random.normal(k1, (1, 1, 8)),
+                            jax.random.normal(k2, (1, 1, 8)),
+                            jnp.full((1,), t), pol, cfg)
+        cache = out.cache
+        n_evictions += int(out.pages_evicted.any()) + int(out.tokens_evicted.any())
+    return cache, n_evictions
+
+
+def test_c1_eviction_frequency_ratio():
+    _, paged = _trace_outcomes("paged_eviction")
+    _, stream = _trace_outcomes("streaming_llm")
+    _, unstr = _trace_outcomes("inverse_key_l2")
+    # token-per-step policies evict every step at steady state; paged only
+    # at page boundaries: ~1/page_size the operations
+    assert stream >= 4 * paged - 4
+    assert unstr >= 4 * paged - 4
+    assert paged > 0
+
+
+def test_c2_budget_bounds_memory():
+    for policy in ("paged_eviction", "streaming_llm", "inverse_key_l2",
+                   "keydiff"):
+        cache, _ = _trace_outcomes(policy, steps=80, budget=16, page=4)
+        assert int(cache.total_valid()[0]) <= 16 + 4, policy
+    full, _ = _trace_outcomes("full", steps=80)
+    assert int(full.total_valid()[0]) == 80
+
+
+def test_c3_structure_preserved_only_by_paged():
+    paged, _ = _trace_outcomes("paged_eviction", steps=77)
+    tpp = np.asarray(paged.tokens_per_page())[0]
+    cur = int(paged.cur_page[0])
+    assert all(n in (0, 4) for i, n in enumerate(tpp) if i != cur)
+
+    unstr, _ = _trace_outcomes("inverse_key_l2", steps=77)
+    tpp_u = np.asarray(unstr.tokens_per_page())[0]
+    cur_u = int(unstr.cur_page[0])
+    partial = [n for i, n in enumerate(tpp_u) if i != cur_u and 0 < n < 4]
+    assert partial, "unstructured eviction must fragment pages"
+
+
+@pytest.mark.parametrize("policy", ["paged_eviction", "streaming_llm", "full"])
+def test_c4_engine_end_to_end_budget_true(policy):
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=32, policy=policy,
+                       dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=2, max_prompt_len=64,
+                 max_new_tokens=16)
+    rng = np.random.default_rng(1)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=60).astype(np.int32))
+            for _ in range(3)]
+    eng.run()
+    assert all(r.num_generated == 16 for r in reqs)
+    kv = jax.tree.map(lambda a: a[0], eng.cache.pattern[0].kv)
+    if policy != "full":
+        assert int(kv.total_valid().max()) <= 32 + 8
+    for r in reqs:
+        assert all(0 <= t < cfg.vocab_size for t in r.output_tokens)
