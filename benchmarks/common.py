@@ -35,6 +35,7 @@ class ServeResult:
     total_tokens: int
     pages_evicted: int
     steps: int
+    pool_utilization: float = 0.0  # mapped / total physical pool pages
 
 
 def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
@@ -64,7 +65,8 @@ def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
     return ServeResult(policy=policy, budget=budget, page=page,
                        throughput_tok_s=s.decode_tok_per_s, tpot_ms=tpot,
                        total_tokens=s.tokens_generated,
-                       pages_evicted=s.pages_evicted, steps=s.steps)
+                       pages_evicted=s.pages_evicted, steps=s.steps,
+                       pool_utilization=eng.pool_stats()["utilization"])
 
 
 def timeit_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:

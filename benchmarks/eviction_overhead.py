@@ -4,7 +4,10 @@ Times ONLY the cache-maintenance path (write + policy post_write) per
 policy at steady state, isolating the paper's overhead argument from model
 compute: PagedEviction pays page-scoring once per page_size steps;
 token-per-step baselines pay argmin-over-cache every step; keydiff
-additionally re-reads all cached keys every step."""
+additionally re-reads all cached keys every step. With the shared page
+pool this path now includes the free-list allocator (rollover pops a page,
+eviction pushes one back); steady-state free-pool headroom is reported
+alongside the timing."""
 from __future__ import annotations
 
 import argparse
@@ -46,8 +49,10 @@ def run(B: int = 8, KV: int = 2, hd: int = 64, page: int = 16,
         k = jax.random.normal(rng, (B, KV, hd))
         t = jnp.full((B,), steps_to_fill, jnp.int32)
         us = timeit_call(step, cache, k, k, t, iters=10 if quick else 30)
-        rows.append((polname, us))
-        print(f"  evict_overhead,{polname},{us:.0f} us/step")
+        free = int(cache.num_free())
+        rows.append((polname, us, free))
+        print(f"  evict_overhead,{polname},{us:.0f} us/step,"
+              f"pool_free={free}/{cache.pool_pages}")
     return rows
 
 

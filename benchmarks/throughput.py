@@ -28,7 +28,8 @@ def run(arch: str = "llama-3.2-1b", budgets=(32, 64, 128), page: int = 8,
                                   new_tokens=8 if quick else new_tokens)
             rows.append(r)
             print(f"  throughput,{arch},{pol},budget={budget},"
-                  f"{r.throughput_tok_s:.1f} tok/s,tpot={r.tpot_ms:.1f}ms")
+                  f"{r.throughput_tok_s:.1f} tok/s,tpot={r.tpot_ms:.1f}ms,"
+                  f"pool_util={r.pool_utilization:.2f}")
     return rows
 
 

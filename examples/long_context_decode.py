@@ -54,7 +54,8 @@ for i in range(args.steps):
     if (i + 1) % 150 == 0:
         kv = jax.tree.map(lambda a: a[0], cache.pattern[0].kv)
         live = int(kv.total_valid()[0])
-        oldest = int(jnp.min(jnp.where(kv.pos >= 0, kv.pos, 10**9)))
+        pv = kv.pos_view()
+        oldest = int(jnp.min(jnp.where(pv >= 0, pv, 10**9)))
         print(f"step {i + 1:4d}: position {int(cache.cur_pos[0]):4d}, "
               f"live tokens {live:3d} (budget {args.budget}), "
               f"oldest retained position {oldest}")

@@ -1,12 +1,15 @@
 """PagedEviction core: paged KV cache + structured block-wise eviction."""
 from repro.core.paged_cache import (
     PagedLayerCache,
+    alloc_pages,
     init_layer_cache,
+    insert_request,
     write_token,
     write_prompt_pages,
     evict_page,
     evict_token,
-    find_free_page,
+    find_free_slot,
+    reclaim_empty_pages,
     start_new_page,
     to_contiguous,
 )
@@ -26,8 +29,9 @@ from repro.core.decode import decode_append
 from repro.core import importance
 
 __all__ = [
-    "PagedLayerCache", "init_layer_cache", "write_token", "write_prompt_pages",
-    "evict_page", "evict_token", "find_free_page", "start_new_page",
+    "PagedLayerCache", "alloc_pages", "init_layer_cache", "insert_request",
+    "write_token", "write_prompt_pages", "evict_page", "evict_token",
+    "find_free_slot", "reclaim_empty_pages", "start_new_page",
     "to_contiguous", "POLICIES", "EvictionOutcome", "EvictionPolicy",
     "FullCache", "InverseKeyL2", "KeyDiff", "PagedEviction", "StreamingLLM",
     "get_policy", "compress_and_page", "decode_append", "importance",

@@ -1,18 +1,38 @@
 """Functional paged KV cache — the TPU/JAX analogue of vLLM's block pool.
 
-Layout (per attention layer):
-    k, v   : (B, P, page, KV, hd)   physical page slab per request
-    pos    : (B, P, page) int32     original token position; -1 == invalid
-    score  : (B, P, page) float32   per-token policy score (higher == keep)
-    cur_page, cur_off : (B,) int32  write head (page slot, offset)
+Layout (per attention layer; see DESIGN.md §2):
+    k, v        : (N_pool, page, KV, hd)  ONE physical page pool shared by
+                                          every request in the batch
+    pos         : (N_pool, page) int32    original token position; -1 invalid
+    score       : (N_pool, page) float32  per-token policy score (higher==keep)
+    block_table : (B, P) int32            logical page -> physical pool page;
+                                          -1 == unmapped slot
+    ref_count   : (N_pool,) int32         pages mapped by a block table;
+                                          0 == on the free list
+    cur_page, cur_off : (B,) int32        write head (LOGICAL page slot, offset)
+
+The free list is the ``ref_count == 0`` mask; :func:`alloc_pages` always
+hands out the lowest-index free pages (deterministic, batch-safe — the i-th
+allocating request gets the i-th free page). ``ref_count`` is an int (not a
+bool) so later PRs can share physical pages between block tables (prefix
+caching) without changing the allocator protocol.
 
 Under an eviction policy with budget C and page size Bp, P is statically
-``C/Bp + 1`` — the budget makes the working set a *static* shape, which is
-exactly what XLA wants (vLLM needs a dynamic allocator for the same thing;
-see DESIGN.md §2). Under ``full`` policy P covers the whole sequence.
+``C/Bp + 1`` per request and ``N_pool = B * P`` by default — the budget makes
+the working set a *static* shape, which is exactly what XLA wants (vLLM
+needs a dynamic allocator for the same thing; see DESIGN.md §2). Unlike the
+old per-request slab, a page evicted by one request returns to the SHARED
+free list, so it is immediately available as headroom for any other request
+— eviction is fleet-level memory reclamation, not per-request bookkeeping.
 
-Evicting a page == zeroing its validity; the physical slot is then reused
-by the next page of tokens. No data movement, ever (the paper's point).
+Evicting a page == zeroing its validity and pushing the physical page back
+on the free list. No data movement, ever (the paper's point).
+
+Invariants (tests/test_pool_invariants.py):
+    F1  allocated + free == N_pool          (free-list conservation)
+    F2  ref_count[p] == number of block-table entries mapping p (<=1 for now)
+    F3  no physical page is mapped by two block-table entries
+    F4  free pages hold no live tokens (their pos rows are all -1)
 """
 from __future__ import annotations
 
@@ -24,36 +44,78 @@ from jax import lax
 
 
 class PagedLayerCache(NamedTuple):
-    k: jax.Array          # (B, P, page, KV, hd) — bf16/f32, or int8 (quantized)
-    v: jax.Array          # (B, P, page, KV, hd)
-    pos: jax.Array        # (B, P, page) int32, -1 invalid
-    score: jax.Array      # (B, P, page) f32, -inf invalid
-    cur_page: jax.Array   # (B,) int32
-    cur_off: jax.Array    # (B,) int32
+    k: jax.Array           # (N, page, KV, hd) — bf16/f32, or int8 (quantized)
+    v: jax.Array           # (N, page, KV, hd)
+    pos: jax.Array         # (N, page) int32, -1 invalid
+    score: jax.Array       # (N, page) f32, -inf invalid
+    block_table: jax.Array  # (B, P) int32, -1 unmapped
+    ref_count: jax.Array   # (N,) int32, 0 == free
+    cur_page: jax.Array    # (B,) int32 — logical page slot
+    cur_off: jax.Array     # (B,) int32
     # int8 mode (beyond-paper: the quantized-KV composition the paper cites
     # as future work): absmax scale per (token, head); None when not quantized
-    k_scale: jax.Array | None = None   # (B, P, page, KV) f32
-    v_scale: jax.Array | None = None   # (B, P, page, KV) f32
+    k_scale: jax.Array | None = None   # (N, page, KV) f32
+    v_scale: jax.Array | None = None   # (N, page, KV) f32
 
     # ----------------------------------------------------------- derived
     @property
     def batch(self) -> int:
-        return self.k.shape[0]
+        return self.block_table.shape[0]
 
     @property
     def num_pages(self) -> int:
-        return self.k.shape[1]
+        """Logical pages per request (block-table width)."""
+        return self.block_table.shape[1]
+
+    @property
+    def pool_pages(self) -> int:
+        """Physical pages in the shared pool."""
+        return self.k.shape[0]
 
     @property
     def page_size(self) -> int:
-        return self.k.shape[2]
+        return self.k.shape[1]
 
+    # -------------------------------------------------- block-table views
+    def mapped_mask(self) -> jax.Array:
+        """(B, P) bool — which logical slots hold a physical page."""
+        return self.block_table >= 0
+
+    def _phys(self) -> jax.Array:
+        """(B, P) int32 — physical ids, clamped to 0 where unmapped."""
+        return jnp.maximum(self.block_table, 0)
+
+    def gather_pages(self, pool_arr: jax.Array) -> jax.Array:
+        """Gather (N, page, ...) pool data into per-request (B, P, page, ...)
+        layout through the block table. Unmapped slots carry page 0's data —
+        callers must mask with :meth:`mapped_mask` / :meth:`pos_view`."""
+        return jnp.take(pool_arr, self._phys(), axis=0)
+
+    def pos_view(self) -> jax.Array:
+        """(B, P, page) int32 — per-request positions; -1 where unmapped."""
+        return jnp.where(self.mapped_mask()[..., None],
+                         self.gather_pages(self.pos), -1)
+
+    def score_view(self) -> jax.Array:
+        """(B, P, page) f32 — per-request scores; -inf where unmapped."""
+        return jnp.where(self.mapped_mask()[..., None],
+                         self.gather_pages(self.score), -jnp.inf)
+
+    def k_view(self) -> jax.Array:
+        """(B, P, page, KV, hd) dequantized per-request K (garbage where
+        unmapped — mask with valid_mask())."""
+        return self.gather_pages(self.k_dequant())
+
+    def v_view(self) -> jax.Array:
+        return self.gather_pages(self.v_dequant())
+
+    # ----------------------------------------------------- token accounting
     def valid_mask(self) -> jax.Array:
         """(B, P, page) bool — which cache slots hold live tokens."""
-        return self.pos >= 0
+        return self.pos_view() >= 0
 
     def tokens_per_page(self) -> jax.Array:
-        """(B, P) int32 — live tokens in each page."""
+        """(B, P) int32 — live tokens in each logical page."""
         return jnp.sum(self.valid_mask(), axis=-1).astype(jnp.int32)
 
     def total_valid(self) -> jax.Array:
@@ -65,15 +127,25 @@ class PagedLayerCache(NamedTuple):
         Pages with no valid tokens score +inf (never the eviction argmin)."""
         valid = self.valid_mask()
         cnt = jnp.sum(valid, axis=-1)
-        ssum = jnp.sum(jnp.where(valid, self.score, 0.0), axis=-1)
+        ssum = jnp.sum(jnp.where(valid, self.score_view(), 0.0), axis=-1)
         return jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), jnp.inf)
 
+    # --------------------------------------------------------- free list
+    def free_mask(self) -> jax.Array:
+        """(N,) bool — pages on the free list."""
+        return self.ref_count == 0
+
+    def num_free(self) -> jax.Array:
+        """() int32 — pages currently on the free list (fleet headroom)."""
+        return jnp.sum(self.free_mask()).astype(jnp.int32)
+
+    # ------------------------------------------------------- quantization
     @property
     def quantized(self) -> bool:
         return self.k_scale is not None
 
     def k_dequant(self) -> jax.Array:
-        """K slab in f32/compute dtype (identity when not quantized)."""
+        """K pool in f32/compute dtype (identity when not quantized)."""
         if not self.quantized:
             return self.k
         return self.k.astype(jnp.float32) * (self.k_scale / 127.0)[..., None]
@@ -93,21 +165,119 @@ def quantize_absmax(x, axis: int = -1):
 
 
 def init_layer_cache(batch: int, num_pages: int, page_size: int,
-                     num_kv_heads: int, head_dim: int, dtype) -> PagedLayerCache:
+                     num_kv_heads: int, head_dim: int, dtype,
+                     pool_pages: int | None = None) -> PagedLayerCache:
+    """Empty cache: pool of ``pool_pages`` (default batch*num_pages) physical
+    pages, per-request block tables of ``num_pages`` logical slots.
+
+    Logical slot 0 of request b is pre-mapped to physical page b so the write
+    head always points at a mapped page (the working page)."""
+    N = pool_pages if pool_pages is not None else batch * num_pages
+    assert N >= batch, (N, batch)
     quantized = dtype in ("int8", jnp.int8)
     dt = jnp.int8 if quantized else dtype
-    shape = (batch, num_pages, page_size, num_kv_heads, head_dim)
-    sshape = (batch, num_pages, page_size, num_kv_heads)
+    shape = (N, page_size, num_kv_heads, head_dim)
+    sshape = (N, page_size, num_kv_heads)
+    bt = jnp.full((batch, num_pages), -1, jnp.int32)
+    bt = bt.at[:, 0].set(jnp.arange(batch, dtype=jnp.int32))
+    ref = jnp.zeros((N,), jnp.int32).at[:batch].set(1)
     return PagedLayerCache(
         k=jnp.zeros(shape, dt),
         v=jnp.zeros(shape, dt),
-        pos=jnp.full((batch, num_pages, page_size), -1, jnp.int32),
-        score=jnp.full((batch, num_pages, page_size), -jnp.inf, jnp.float32),
+        pos=jnp.full((N, page_size), -1, jnp.int32),
+        score=jnp.full((N, page_size), -jnp.inf, jnp.float32),
+        block_table=bt,
+        ref_count=ref,
         cur_page=jnp.zeros((batch,), jnp.int32),
         cur_off=jnp.zeros((batch,), jnp.int32),
         k_scale=jnp.zeros(sshape, jnp.float32) if quantized else None,
         v_scale=jnp.zeros(sshape, jnp.float32) if quantized else None,
     )
+
+
+# ---------------------------------------------------------------------------
+# free-list allocator
+# ---------------------------------------------------------------------------
+# Scatter targets use the pool size N as an out-of-bounds sentinel: JAX drops
+# out-of-bounds scatter updates, which makes every batched op below mask-free
+# (no where-with-old-value dance, no duplicate-index hazards).
+
+def alloc_pages(cache: PagedLayerCache, need):
+    """Pop one free physical page per request where ``need``.
+
+    need: (B,) bool. Returns (cache', phys (B,) int32, ok (B,) bool); ``phys``
+    is the pool sentinel N where not ok. The i-th needing request receives the
+    i-th lowest-index free page, so simultaneous allocations never collide.
+    O(N) via a cumsum + searchsorted over the free mask (no pool sort)."""
+    N = cache.pool_pages
+    free = cache.free_mask()                          # (N,)
+    csum = jnp.cumsum(free.astype(jnp.int32))         # free pages seen so far
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1     # (B,) alloc position
+    ok = need & (rank < csum[-1])
+    # index of the (rank+1)-th free page
+    found = jnp.searchsorted(csum, rank + 1, side="left")
+    phys = jnp.where(ok, found, N).astype(jnp.int32)
+    ref = cache.ref_count.at[phys].add(1)             # OOB sentinel dropped
+    return cache._replace(ref_count=ref), phys, ok
+
+
+def _free_phys(cache: PagedLayerCache, phys, enable) -> PagedLayerCache:
+    """Return physical pages to the free list (pos/score invalidated).
+    phys: (B,) physical ids; enable: (B,) bool."""
+    N = cache.pool_pages
+    tgt = jnp.where(enable, phys, N)
+    return cache._replace(
+        pos=cache.pos.at[tgt].set(-1),
+        score=cache.score.at[tgt].set(-jnp.inf),
+        ref_count=cache.ref_count.at[tgt].add(-1),
+    )
+
+
+def find_free_slot(cache: PagedLayerCache):
+    """(B,) first UNMAPPED logical slot per request + (B,) bool existence."""
+    unmapped = ~cache.mapped_mask()                   # (B, P)
+    idx = jnp.argmax(unmapped, axis=-1).astype(jnp.int32)
+    exists = jnp.any(unmapped, axis=-1)
+    return idx, exists
+
+
+def start_new_page(cache: PagedLayerCache, slot, phys, enable=None
+                   ) -> PagedLayerCache:
+    """Map logical ``slot`` -> physical ``phys`` (freshly allocated via
+    :func:`alloc_pages`) and move the write head there."""
+    B = cache.batch
+    b = jnp.arange(B)
+    if enable is None:
+        enable = jnp.ones((B,), bool)
+    bt = cache.block_table.at[b, slot].set(
+        jnp.where(enable, phys.astype(jnp.int32), cache.block_table[b, slot]))
+    return cache._replace(
+        block_table=bt,
+        cur_page=jnp.where(enable, slot.astype(jnp.int32), cache.cur_page),
+        cur_off=jnp.where(enable, 0, cache.cur_off),
+    )
+
+
+def reclaim_empty_pages(cache: PagedLayerCache, include_current=None
+                        ) -> PagedLayerCache:
+    """Unmap every logical slot whose page holds zero live tokens and return
+    the physical page to the shared free list. The current write page is
+    exempt unless ``include_current`` (B,) bool says the row is rolling over
+    anyway. Empty mapped pages arise from token-level eviction (unstructured
+    baselines) and from evicting the just-filled working page."""
+    B, P = cache.block_table.shape
+    N = cache.pool_pages
+    if include_current is None:
+        include_current = jnp.zeros((B,), bool)
+    is_cur = jax.nn.one_hot(cache.cur_page, P, dtype=bool)
+    dead = cache.mapped_mask() & (cache.tokens_per_page() == 0) & \
+        (~is_cur | include_current[:, None])          # (B, P)
+    # empty pages already hold pos == -1 everywhere (F4): freeing is just
+    # a ref_count decrement + block-table unmap
+    tgt = jnp.where(dead, cache._phys(), N).reshape(-1)
+    ref = cache.ref_count.at[tgt].add(-1)
+    bt = jnp.where(dead, -1, cache.block_table)
+    return cache._replace(ref_count=ref, block_table=bt)
 
 
 # ---------------------------------------------------------------------------
@@ -121,17 +291,19 @@ def write_token(cache: PagedLayerCache, k_tok, v_tok, pos_tok, score_tok,
     k_tok, v_tok: (B, KV, hd); pos_tok: (B,) int32; score_tok: (B,) f32.
     ``active``: optional (B,) bool — requests not active are left untouched
     (continuous batching: finished / empty slots).
-    Caller must ensure cur_off < page_size (policies roll the page over).
-    """
-    b = jnp.arange(cache.batch)
+    Caller must ensure cur_off < page_size (policies roll the page over)."""
+    B = cache.batch
+    b = jnp.arange(B)
+    N = cache.pool_pages
     if active is None:
-        active = jnp.ones((cache.batch,), bool)
-    p, o = cache.cur_page, cache.cur_off
+        active = jnp.ones((B,), bool)
+    phys = cache.block_table[b, cache.cur_page]       # (B,) physical page
+    ok = active & (phys >= 0)
+    tgt = jnp.where(ok, phys, N)                      # OOB drop when masked
+    o = cache.cur_off
 
     def upd(dst, val):
-        cur = dst[b, p, o]
-        return dst.at[b, p, o].set(jnp.where(
-            active.reshape((-1,) + (1,) * (val.ndim - 1)), val.astype(dst.dtype), cur))
+        return dst.at[tgt, o].set(val.astype(dst.dtype))
 
     if cache.quantized:
         kq, ks = quantize_absmax(k_tok)
@@ -143,50 +315,81 @@ def write_token(cache: PagedLayerCache, k_tok, v_tok, pos_tok, score_tok,
     else:
         k = upd(cache.k, k_tok)
         v = upd(cache.v, v_tok)
-    pos = cache.pos.at[b, p, o].set(
-        jnp.where(active, pos_tok.astype(jnp.int32), cache.pos[b, p, o]))
-    score = cache.score.at[b, p, o].set(
-        jnp.where(active, score_tok.astype(jnp.float32), cache.score[b, p, o]))
-    off = jnp.where(active, o + 1, o)
+    pos = cache.pos.at[tgt, o].set(pos_tok.astype(jnp.int32))
+    score = cache.score.at[tgt, o].set(score_tok.astype(jnp.float32))
+    off = jnp.where(ok, o + 1, o)
     return cache._replace(k=k, v=v, pos=pos, score=score, cur_off=off)
 
 
 def write_prompt_pages(cache: PagedLayerCache, k_sel, v_sel, pos_sel, score_sel,
                        ) -> PagedLayerCache:
     """Bulk-write C selected prompt tokens (already compressed by the prefill
-    policy) into pages [0 .. C/page). C must be a multiple of page_size.
+    policy) into logical pages [0 .. C/page). C must be a multiple of
+    page_size. RESETS the whole cache: every request row is rewritten, all
+    previous mappings are discarded.
+
+    Physical placement is row-major over the first B*(n+1) pool pages —
+    deterministic, so prefill results are bit-stable regardless of what the
+    pool held before. One extra page per request is mapped (and left empty)
+    as the decode working page wherever the block table has room.
 
     k_sel, v_sel: (B, C, KV, hd); pos_sel: (B, C) (-1 = padding/invalid);
-    score_sel: (B, C).
-    """
+    score_sel: (B, C)."""
     B, C = pos_sel.shape
     page = cache.page_size
+    P = cache.num_pages
+    N = cache.pool_pages
     assert C % page == 0, (C, page)
     n = C // page
-    assert n <= cache.num_pages, (n, cache.num_pages)
+    assert n <= P, (n, P)
     KV, hd = k_sel.shape[2], k_sel.shape[3]
+    # map an empty working page after the prompt pages when a slot exists;
+    # when the prompt exactly fills the block table, park the head on the
+    # last page with cur_off == page_size (writes drop until rollover)
+    extra = 1 if n < P else 0
+    stride = n + extra
+    assert B * stride <= N, (B, stride, N)
+
+    phys = (jnp.arange(B, dtype=jnp.int32)[:, None] * stride +
+            jnp.arange(stride, dtype=jnp.int32)[None, :])      # (B, stride)
+    bt = jnp.full((B, P), -1, jnp.int32)
+    bt = lax.dynamic_update_slice(bt, phys, (0, 0))
+    ref = jnp.zeros((N,), jnp.int32).at[phys.reshape(-1)].set(1)
+
+    def scatter_prompt(reset_pool, val):
+        """Write the (B*n, ...) prompt pages into the freshly-reset pool at
+        rows b*stride + j."""
+        idx = (jnp.arange(B, dtype=jnp.int32)[:, None] * stride +
+               jnp.arange(n, dtype=jnp.int32)[None, :]).reshape(-1)
+        return reset_pool.at[idx].set(val.astype(reset_pool.dtype))
 
     if cache.quantized:
         kq, ks = quantize_absmax(k_sel)
         vq, vs = quantize_absmax(v_sel)
-        k = cache.k.at[:, :n].set(kq.reshape(B, n, page, KV, hd))
-        v = cache.v.at[:, :n].set(vq.reshape(B, n, page, KV, hd))
+        k = scatter_prompt(jnp.zeros_like(cache.k),
+                           kq.reshape(B * n, page, KV, hd))
+        v = scatter_prompt(jnp.zeros_like(cache.v),
+                           vq.reshape(B * n, page, KV, hd))
         cache = cache._replace(
-            k_scale=cache.k_scale.at[:, :n].set(ks.reshape(B, n, page, KV)),
-            v_scale=cache.v_scale.at[:, :n].set(vs.reshape(B, n, page, KV)))
+            k_scale=scatter_prompt(jnp.zeros_like(cache.k_scale),
+                                   ks.reshape(B * n, page, KV)),
+            v_scale=scatter_prompt(jnp.zeros_like(cache.v_scale),
+                                   vs.reshape(B * n, page, KV)))
     else:
-        k = cache.k.at[:, :n].set(
-            k_sel.reshape(B, n, page, KV, hd).astype(cache.k.dtype))
-        v = cache.v.at[:, :n].set(
-            v_sel.reshape(B, n, page, KV, hd).astype(cache.v.dtype))
-    pos = cache.pos.at[:, :n].set(pos_sel.reshape(B, n, page).astype(jnp.int32))
-    score = cache.score.at[:, :n].set(
-        jnp.where(pos_sel.reshape(B, n, page) >= 0,
-                  score_sel.reshape(B, n, page).astype(jnp.float32), -jnp.inf))
+        k = scatter_prompt(jnp.zeros_like(cache.k),
+                           k_sel.reshape(B * n, page, KV, hd))
+        v = scatter_prompt(jnp.zeros_like(cache.v),
+                           v_sel.reshape(B * n, page, KV, hd))
+    pos_pages = pos_sel.reshape(B * n, page).astype(jnp.int32)
+    score_pages = jnp.where(pos_sel.reshape(B * n, page) >= 0,
+                            score_sel.reshape(B * n, page).astype(jnp.float32),
+                            -jnp.inf)
+    pos = scatter_prompt(jnp.full_like(cache.pos, -1), pos_pages)
+    score = scatter_prompt(jnp.full_like(cache.score, -jnp.inf), score_pages)
     return cache._replace(
-        k=k, v=v, pos=pos, score=score,
-        cur_page=jnp.full((B,), n, jnp.int32),
-        cur_off=jnp.zeros((B,), jnp.int32),
+        k=k, v=v, pos=pos, score=score, block_table=bt, ref_count=ref,
+        cur_page=jnp.full((B,), min(n, P - 1), jnp.int32),
+        cur_off=jnp.full((B,), 0 if extra else page, jnp.int32),
     )
 
 
@@ -195,48 +398,104 @@ def write_prompt_pages(cache: PagedLayerCache, k_sel, v_sel, pos_sel, score_sel,
 # ---------------------------------------------------------------------------
 
 def evict_page(cache: PagedLayerCache, page_idx, enable=None) -> PagedLayerCache:
-    """Invalidate an entire page per request. page_idx: (B,) int32.
-    ``enable``: (B,) bool — rows where eviction actually happens."""
+    """Evict an entire LOGICAL page per request: invalidate its tokens,
+    return the physical page to the shared free list, unmap the slot.
+    page_idx: (B,) int32 logical slot. ``enable``: (B,) bool."""
     B = cache.batch
     b = jnp.arange(B)
     if enable is None:
         enable = jnp.ones((B,), bool)
-    pos_rows = jnp.where(enable[:, None], -1, cache.pos[b, page_idx])
-    score_rows = jnp.where(enable[:, None], -jnp.inf, cache.score[b, page_idx])
-    return cache._replace(pos=cache.pos.at[b, page_idx].set(pos_rows),
-                          score=cache.score.at[b, page_idx].set(score_rows))
+    phys = cache.block_table[b, page_idx]             # (B,)
+    en = enable & (phys >= 0)
+    cache = _free_phys(cache, jnp.maximum(phys, 0), en)
+    bt = cache.block_table.at[b, page_idx].set(
+        jnp.where(en, -1, cache.block_table[b, page_idx]))
+    return cache._replace(block_table=bt)
 
 
 def evict_token(cache: PagedLayerCache, flat_idx, enable=None) -> PagedLayerCache:
-    """Invalidate a single token per request addressed by flattened (P*page)
-    index. flat_idx: (B,) int32."""
-    B, P, page = cache.pos.shape
+    """Invalidate a single token per request addressed by flattened LOGICAL
+    (P*page) index. flat_idx: (B,) int32. The physical page stays mapped
+    (unstructured fragmentation — the paper's Limitation 1); fully-emptied
+    pages return to the pool at the next rollover via reclaim_empty_pages."""
+    B = cache.batch
+    page = cache.page_size
+    N = cache.pool_pages
     b = jnp.arange(B)
     if enable is None:
         enable = jnp.ones((B,), bool)
     pi, oi = flat_idx // page, flat_idx % page
-    pos = cache.pos.at[b, pi, oi].set(
-        jnp.where(enable, -1, cache.pos[b, pi, oi]))
-    score = cache.score.at[b, pi, oi].set(
-        jnp.where(enable, -jnp.inf, cache.score[b, pi, oi]))
-    return cache._replace(pos=pos, score=score)
-
-
-def find_free_page(cache: PagedLayerCache) -> tuple[jax.Array, jax.Array]:
-    """(B,) index of a fully-empty page slot + (B,) bool whether one exists."""
-    empty = cache.tokens_per_page() == 0                 # (B, P)
-    idx = jnp.argmax(empty, axis=-1).astype(jnp.int32)
-    exists = jnp.any(empty, axis=-1)
-    return idx, exists
-
-
-def start_new_page(cache: PagedLayerCache, slot, enable=None) -> PagedLayerCache:
-    """Move the write head to ``slot`` (must be empty) and reset the offset."""
-    if enable is None:
-        enable = jnp.ones((cache.batch,), bool)
+    phys = cache.block_table[b, pi]
+    en = enable & (phys >= 0)
+    tgt = jnp.where(en, jnp.maximum(phys, 0), N)
     return cache._replace(
-        cur_page=jnp.where(enable, slot.astype(jnp.int32), cache.cur_page),
-        cur_off=jnp.where(enable, 0, cache.cur_off),
+        pos=cache.pos.at[tgt, oi].set(-1),
+        score=cache.score.at[tgt, oi].set(-jnp.inf),
+    )
+
+
+# ---------------------------------------------------------------------------
+# request insertion (continuous batching: splice a prefilled B=1 cache in)
+# ---------------------------------------------------------------------------
+
+def insert_request(dst: PagedLayerCache, src: PagedLayerCache, slot: int
+                   ) -> PagedLayerCache:
+    """Splice single-request ``src`` (batch 1, its own pool) into batch row
+    ``slot`` of ``dst``: free the pages the leaving request held, allocate
+    fresh pages from the shared free list, copy src's mapped pages across,
+    and write the new block-table row. O(P) pages copied, no slab-shaped
+    transfer. Requires matching page_size/num_pages and a pool with >= P
+    free pages after the old row is released (guaranteed at the default
+    N_pool == B * P sizing)."""
+    B, P = dst.block_table.shape
+    assert src.block_table.shape == (1, P), (src.block_table.shape, P)
+    assert src.page_size == dst.page_size
+    N = dst.pool_pages
+    # undersized (overcommitted) pools could leave < P free pages after the
+    # old row is released, and the dest selection below would then silently
+    # overwrite other requests' live pages — refuse at trace time
+    assert N >= B * P, (
+        f"insert_request needs a full-size pool (>= {B}*{P} pages, got {N}); "
+        "overcommitted pools need free-count-aware admission")
+
+    # 1. release the leaving request's pages
+    old_row = dst.block_table[slot]                   # (P,)
+    old_tgt = jnp.where(old_row >= 0, jnp.maximum(old_row, 0), N)
+    ref = dst.ref_count.at[old_tgt].add(-1)
+    pos = dst.pos.at[old_tgt].set(-1)
+    score = dst.score.at[old_tgt].set(-jnp.inf)
+
+    # 2. claim the P lowest-index free pages as destinations
+    csum = jnp.cumsum((ref == 0).astype(jnp.int32))
+    dest = jnp.searchsorted(csum, jnp.arange(1, P + 1),
+                            side="left").astype(jnp.int32)   # (P,) distinct
+    src_row = src.block_table[0]                      # (P,)
+    src_mapped = src_row >= 0
+    src_phys = jnp.maximum(src_row, 0)
+    dest_tgt = jnp.where(src_mapped, dest, N)         # copy mapped slots only
+
+    def copy(dst_arr, src_arr):
+        return dst_arr.at[dest_tgt].set(
+            jnp.take(src_arr, src_phys, axis=0).astype(dst_arr.dtype))
+
+    k = copy(dst.k, src.k)
+    v = copy(dst.v, src.v)
+    pos = copy(pos, src.pos)
+    score = copy(score, src.score)
+    ref = ref.at[dest_tgt].add(1)
+    k_scale = v_scale = None
+    if dst.quantized:
+        k_scale = copy(dst.k_scale, src.k_scale)
+        v_scale = copy(dst.v_scale, src.v_scale)
+
+    new_row = jnp.where(src_mapped, dest, -1)
+    return dst._replace(
+        k=k, v=v, pos=pos, score=score,
+        k_scale=k_scale, v_scale=v_scale,
+        block_table=dst.block_table.at[slot].set(new_row),
+        ref_count=ref,
+        cur_page=dst.cur_page.at[slot].set(src.cur_page[0]),
+        cur_off=dst.cur_off.at[slot].set(src.cur_off[0]),
     )
 
 
@@ -245,11 +504,13 @@ def start_new_page(cache: PagedLayerCache, slot, enable=None) -> PagedLayerCache
 # ---------------------------------------------------------------------------
 
 def to_contiguous(cache: PagedLayerCache):
-    """Return (k, v, pos, mask) flattened over pages: (B, P*page, KV, hd),
-    dequantized if needed. Order is physical, not logical — attention is
-    permutation-invariant given correct positions, which tests exploit."""
-    B, P, page, KV, hd = cache.k.shape
-    return (cache.k_dequant().reshape(B, P * page, KV, hd),
-            cache.v_dequant().reshape(B, P * page, KV, hd),
-            cache.pos.reshape(B, P * page),
+    """Return (k, v, pos, mask) flattened over logical pages:
+    (B, P*page, KV, hd), dequantized if needed. Order is physical-within-
+    logical, not position order — attention is permutation-invariant given
+    correct positions, which tests exploit."""
+    B, P, page = cache.batch, cache.num_pages, cache.page_size
+    KV, hd = cache.k.shape[2], cache.k.shape[3]
+    return (cache.k_view().reshape(B, P * page, KV, hd),
+            cache.v_view().reshape(B, P * page, KV, hd),
+            cache.pos_view().reshape(B, P * page),
             cache.valid_mask().reshape(B, P * page))

@@ -33,9 +33,11 @@ from repro.configs.base import CacheConfig
 from repro.core import importance
 from repro.core.paged_cache import (
     PagedLayerCache,
+    alloc_pages,
     evict_page,
     evict_token,
-    find_free_page,
+    find_free_slot,
+    reclaim_empty_pages,
     start_new_page,
 )
 
@@ -54,23 +56,49 @@ def _no_evict(cache):
 
 
 def _rollover_to_free_page(cache: PagedLayerCache, need):
-    """Where ``need``, move the write head to an empty slot; if none exists
-    (unstructured fragmentation) force-evict the fullest-but-not-current page
-    with the fewest valid tokens."""
-    slot, exists = find_free_page(cache)
-    must_force = need & ~exists
+    """Where ``need``, allocate a fresh physical page from the SHARED pool,
+    map it into the first unmapped logical slot, and move the write head
+    there. Fully-emptied mapped pages (token-level eviction holes) are
+    reclaimed to the free list first, so one request's evictions become
+    every other request's headroom. If a request has no unmapped slot or the
+    pool has no free page (unstructured fragmentation / overcommit),
+    force-evict its fullest-but-not-current page with the fewest valid
+    tokens, which releases both a slot and a physical page.
+
+    The whole body runs under ``lax.cond`` on ``any(need)``: pages fill once
+    per page_size steps, so the reclaim/alloc bookkeeping is skipped on the
+    other page_size - 1 steps (the overhead benchmarks measure this). The
+    branches are module-level functions so eager callers hit the cond's
+    compile cache across steps."""
+    return jax.lax.cond(jnp.any(need), _rollover_body, _rollover_noop,
+                        (cache, need))
+
+
+def _rollover_noop(args):
+    cache, need = args
+    return cache, jnp.zeros((cache.batch,), bool)
+
+
+def _rollover_body(args):
+    cache, need = args
+    c = reclaim_empty_pages(cache, include_current=need)
+    slot, slot_ok = find_free_slot(c)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    phys_ok = rank < c.num_free()
+    must_force = need & (~slot_ok | ~phys_ok)
     # force-evict the page with fewest (but >0) valid tokens, never the
     # current write page
-    tpp = cache.tokens_per_page().astype(jnp.float32)     # (B, P)
+    tpp = c.tokens_per_page().astype(jnp.float32)     # (B, P)
     B, P = tpp.shape
-    cur_onehot = jax.nn.one_hot(cache.cur_page, P, dtype=bool)
+    cur_onehot = jax.nn.one_hot(c.cur_page, P, dtype=bool)
     cand = jnp.where((tpp > 0) & ~cur_onehot, tpp, jnp.inf)
     victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
-    cache = evict_page(cache, victim, enable=must_force)
-    slot2, _ = find_free_page(cache)
+    c = evict_page(c, victim, enable=must_force)
+    slot2, _ = find_free_slot(c)
     slot = jnp.where(must_force, slot2, slot)
-    cache = start_new_page(cache, slot, enable=need)
-    return cache, must_force
+    c, phys, ok = alloc_pages(c, need)
+    c = start_new_page(c, slot, phys, enable=need & ok)
+    return c, must_force
 
 
 class EvictionPolicy:
@@ -152,10 +180,26 @@ class FullCache(EvictionPolicy):
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         need = active & (cache.cur_off >= cache.page_size)
-        nxt = jnp.minimum(cache.cur_page + 1, cache.num_pages - 1)
-        cache = start_new_page(cache, nxt, enable=need)
+        cache = jax.lax.cond(jnp.any(need), _full_grow_body, _full_grow_noop,
+                             (cache, need))
         t, f = _no_evict(cache)
         return EvictionOutcome(cache, t, t, f)
+
+
+def _full_grow_noop(args):
+    return args[0]
+
+
+def _full_grow_body(args):
+    cache, need = args
+    slot, slot_ok = find_free_slot(cache)
+    cache, phys, ok = alloc_pages(cache, need & slot_ok)
+    grow = need & slot_ok & ok
+    cache = start_new_page(cache, slot, phys, enable=grow)
+    # saturated (block table exhausted — callers size slabs so this only
+    # happens after the final token): never evict; park the head on the
+    # full current page with off reset, mirroring the old clamp
+    return cache._replace(cur_off=jnp.where(need & ~grow, 0, cache.cur_off))
 
 
 # ---------------------------------------------------------------------------
@@ -232,8 +276,9 @@ class StreamingLLM(EvictionPolicy):
         valid = cache.valid_mask()
         B, P, page = valid.shape
         # oldest non-sink token
-        cand = jnp.where(valid & (cache.pos >= cfg.num_sink_tokens),
-                         cache.pos, jnp.iinfo(jnp.int32).max)
+        pos = cache.pos_view()
+        cand = jnp.where(valid & (pos >= cfg.num_sink_tokens),
+                         pos, jnp.iinfo(jnp.int32).max)
         flat = cand.reshape(B, P * page)
         victim = jnp.argmin(flat, axis=-1).astype(jnp.int32)
         cache = evict_token(cache, victim, enable=over)
@@ -258,7 +303,7 @@ class _UnstructuredTokenPolicy(EvictionPolicy):
 
     def _evict_scores(self, cache):
         """(B, P, page) dynamic importance; override if not stored score."""
-        return cache.score
+        return cache.score_view()
 
     def post_write(self, cache, cfg, active=None):
         if active is None:
@@ -298,7 +343,7 @@ class KeyDiff(_UnstructuredTokenPolicy):
 
     def _evict_scores(self, cache):
         valid = cache.valid_mask()                          # (B,P,page)
-        kf = cache.k_dequant().astype(jnp.float32)
+        kf = cache.k_view().astype(jnp.float32)
         w = valid[..., None, None].astype(jnp.float32)
         mean = jnp.sum(kf * w, axis=(1, 2)) / jnp.maximum(
             jnp.sum(w, axis=(1, 2)), 1.0)                   # (B,KV,hd)

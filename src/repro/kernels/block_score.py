@@ -1,11 +1,14 @@
 """Pallas TPU kernel for the paper's page scoring (Alg. 1, block mode).
 
 Computes S_j = mean_{i in page j, valid} ( mean_h ||V_i|| / mean_h ||K_i|| )
-directly from the paged cache slab — the fused replacement for reading
+directly from the PHYSICAL page pool — the fused replacement for reading
 K/V back to compute importance on the host. Runs once per page-full event
 (every page_size decode steps), which is the paper's amortization argument.
+Scoring the pool (not per-request views) means each physical page is
+reduced exactly once no matter how many block tables map it — the wrapper
+(ops.py) gathers pool scores into (B, P) through the block table.
 
-Grid: (batch, page). Each step reduces one (page, KV, hd) K and V tile to a
+Grid: (pool_page,). Each step reduces one (page, KV, hd) K and V tile to a
 single page score. Empty pages score +inf (never the eviction argmin).
 """
 from __future__ import annotations
@@ -36,19 +39,20 @@ def _block_score_kernel(k_ref, v_ref, pos_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def block_score_kernel(k_pages, v_pages, pos, *, interpret: bool = True):
-    """k_pages, v_pages: (B, P, page, KV, hd); pos: (B, P, page) int32
-    -> page scores (B, P) f32."""
-    B, P, page, KV, hd = k_pages.shape
-    return pl.pallas_call(
+def block_score_kernel(k_pool, v_pool, pos, *, interpret: bool = True):
+    """k_pool, v_pool: (N, page, KV, hd); pos: (N, page) int32
+    -> per-physical-page scores (N,) f32."""
+    N, page, KV, hd = k_pool.shape
+    out = pl.pallas_call(
         _block_score_kernel,
-        grid=(B, P),
+        grid=(N,),
         in_specs=[
-            pl.BlockSpec((None, None, page, KV, hd), lambda b, p: (b, p, 0, 0, 0)),
-            pl.BlockSpec((None, None, page, KV, hd), lambda b, p: (b, p, 0, 0, 0)),
-            pl.BlockSpec((None, 1, page), lambda b, p: (b, p, 0)),
+            pl.BlockSpec((None, page, KV, hd), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((None, page, KV, hd), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, page), lambda n: (n, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda b, p: (b, p)),
-        out_shape=jax.ShapeDtypeStruct((B, P), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1), lambda n: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.float32),
         interpret=interpret,
-    )(k_pages, v_pages, pos)
+    )(k_pool, v_pool, pos)
+    return out[:, 0]

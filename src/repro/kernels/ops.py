@@ -4,6 +4,11 @@ On this CPU container the kernels run in ``interpret=True`` mode (the body
 executes in Python via the Pallas interpreter); on a real TPU set
 ``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1) and
 the same ``pl.pallas_call`` lowers to Mosaic.
+
+The paged-attention wrappers only permute the page POOL into the kernel's
+(KV, N_pool, page, hd) tile layout — the per-request view is never
+materialized; indirection happens inside the kernel through the
+scalar-prefetched block table (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -19,16 +24,20 @@ from repro.kernels.paged_attention import paged_attention_kernel
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
+def _pool_layout(arr):
+    """(N, page, KV, hd) -> (KV, N, page, hd) contiguous page tiles."""
+    return jnp.moveaxis(arr, 2, 0)
+
+
 def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
                     scale: float | None = None):
-    """Decode attention over a paged cache via the Pallas kernel.
+    """Decode attention over a pooled paged cache via the Pallas kernel.
 
     q: (B, H, hd) current-token queries -> (B, H, hd).
     """
     B, H, hd = q.shape
-    KV = cache.k.shape[3]
+    KV = cache.k.shape[2]
     G = H // KV
-    # cache slab (B, P, page, KV, hd) -> kernel layout (B, KV, P, page, hd)
     if cache.quantized:
         # int8-native: K/V stream to VMEM as int8 and dequantize in-register
         # (HBM traffic ~0.53x of bf16 — the quantized-KV composition the
@@ -36,23 +45,28 @@ def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
         from repro.kernels.paged_attention import paged_attention_kernel_int8
         out = paged_attention_kernel_int8(
             q.reshape(B, KV, G, hd),
-            jnp.moveaxis(cache.k, 3, 1), jnp.moveaxis(cache.v, 3, 1),
-            jnp.moveaxis(cache.k_scale, 3, 1),
-            jnp.moveaxis(cache.v_scale, 3, 1),
-            cache.pos, cur_pos, window=window, scale=scale,
-            interpret=INTERPRET)
+            _pool_layout(cache.k), _pool_layout(cache.v),
+            jnp.moveaxis(cache.k_scale, 2, 0),
+            jnp.moveaxis(cache.v_scale, 2, 0),
+            cache.pos, cache.block_table, cur_pos,
+            window=window, scale=scale, interpret=INTERPRET)
         return out.reshape(B, H, hd)
-    k_pages = jnp.moveaxis(cache.k, 3, 1)
-    v_pages = jnp.moveaxis(cache.v, 3, 1)
     out = paged_attention_kernel(
-        q.reshape(B, KV, G, hd), k_pages, v_pages, cache.pos, cur_pos,
+        q.reshape(B, KV, G, hd),
+        _pool_layout(cache.k), _pool_layout(cache.v),
+        cache.pos, cache.block_table, cur_pos,
         window=window, scale=scale, interpret=INTERPRET)
     return out.reshape(B, H, hd)
 
 
 def page_scores(cache: PagedLayerCache):
-    """Fused page scoring (paper Alg.1 block mode): (B, P) f32."""
-    return block_score_kernel(cache.k, cache.v, cache.pos, interpret=INTERPRET)
+    """Fused page scoring (paper Alg.1 block mode): (B, P) f32. Each physical
+    page is reduced once on the pool, then gathered per request."""
+    pool = block_score_kernel(cache.k, cache.v, cache.pos,
+                              interpret=INTERPRET)          # (N,)
+    return jnp.where(cache.mapped_mask(),
+                     jnp.take(pool, jnp.maximum(cache.block_table, 0)),
+                     jnp.inf)
 
 
 def flash_attention(q, k, v, *, window: int = 0, scale: float | None = None,

@@ -1,19 +1,27 @@
-"""Pallas TPU paged-attention decode kernel.
+"""Pallas TPU paged-attention decode kernel with block-table indirection.
 
 The TPU-native replacement for vLLM's CUDA PagedAttention (DESIGN.md §2):
-one query token per request attends over the paged KV cache, page by page,
-with flash (online-softmax) accumulation in VMEM scratch.
+one query token per request attends over the SHARED page pool, walking its
+block table page by page, with flash (online-softmax) accumulation in VMEM
+scratch.
 
-Grid: (batch, kv_head, page). TPU grid execution is sequential over the
-minor-most dimension, so the (m, l, acc) scratch accumulates across the
-page axis; output is written on the last page step. Pages stream
-HBM -> VMEM one (page_size, head_dim) tile per K and V — the working set is
-O(page) regardless of context length, and evicted pages are skipped by the
-position mask (pos < 0), never touched by a gather.
+Grid: (batch, kv_head, logical_page). TPU grid execution is sequential over
+the minor-most dimension, so the (m, l, acc) scratch accumulates across the
+page axis; output is written on the last page step.
 
-Layout: the wrapper (ops.py) permutes the cache slab to (B, KV, P, page, hd)
-so each block is a contiguous (page, hd) tile — page_size 16 x head_dim 128
-is MXU/VPU aligned.
+Indirection is gather-free: the block table rides in as a scalar-prefetch
+operand (``pltpu.PrefetchScalarGridSpec``), so each BlockSpec ``index_map``
+reads ``bt[b, p]`` and DMAs exactly one (page_size, head_dim) physical K/V
+tile from the pool — the working set is O(page) regardless of context
+length or pool size, and no (B, P, page, ...) gathered copy of the cache is
+ever materialized. Unmapped slots (bt[b, p] < 0) clamp their DMA to pool
+page 0 and are masked inside the kernel body via the same scalar ref —
+essential, because a freed physical page may already hold ANOTHER request's
+live tokens.
+
+Layout: the wrapper (ops.py) permutes the pool to (KV, N_pool, page, hd) so
+each block is a contiguous (page, hd) tile — page_size 16 x head_dim 128 is
+MXU/VPU aligned.
 """
 from __future__ import annotations
 
@@ -27,19 +35,21 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(q_ref, k_ref, v_ref, pos_ref, curpos_ref, o_ref,
-                       m_scr, l_scr, acc_scr, *, num_pages: int, window: int,
-                       scale: float):
-    """One (batch, kv_head, page) step.
+def _paged_attn_kernel(bt_ref, q_ref, k_ref, v_ref, pos_ref, curpos_ref,
+                       o_ref, m_scr, l_scr, acc_scr, *, num_pages: int,
+                       window: int, scale: float):
+    """One (batch, kv_head, logical_page) step.
 
+    bt_ref  : (B, P) int32 block tables (scalar prefetch, SMEM)
     q_ref   : (G, hd)      this kv-head's query group
-    k_ref   : (page, hd)   one page of keys
-    v_ref   : (page, hd)   one page of values
-    pos_ref : (1, page)    token positions (-1 == evicted/invalid)
+    k_ref   : (page, hd)   one PHYSICAL page of keys (block-table indexed)
+    v_ref   : (page, hd)   one physical page of values
+    pos_ref : (1, page)    token positions of that physical page (-1 invalid)
     curpos_ref : (1, 1)    current decode position
     o_ref   : (G, hd)      output (written on the last page step)
     scratch : m (G, 128), l (G, 128), acc (G, hd) f32
     """
+    b = pl.program_id(0)
     p = pl.program_id(2)
 
     @pl.when(p == 0)
@@ -53,10 +63,11 @@ def _paged_attn_kernel(q_ref, k_ref, v_ref, pos_ref, curpos_ref, o_ref,
     v = v_ref[...].astype(jnp.float32)                  # (page, hd)
     pos = pos_ref[0, :]                                 # (page,) int32
     cur = curpos_ref[0, 0]
+    mapped = bt_ref[b, p] >= 0                          # this slot holds a page
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    valid = (pos >= 0) & (pos <= cur)
+    valid = mapped & (pos >= 0) & (pos <= cur)
     if window > 0:
         valid &= pos > (cur - window)
     s = jnp.where(valid[None, :], s, NEG_INF)           # (G, page)
@@ -81,14 +92,15 @@ def _paged_attn_kernel(q_ref, k_ref, v_ref, pos_ref, curpos_ref, o_ref,
                       jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
 
 
-def _paged_attn_kernel_int8(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref,
-                            curpos_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                            num_pages: int, window: int, scale: float):
+def _paged_attn_kernel_int8(bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                            pos_ref, curpos_ref, o_ref, m_scr, l_scr, acc_scr,
+                            *, num_pages: int, window: int, scale: float):
     """int8 variant: K/V tiles arrive quantized; dequantization happens in
     VMEM (one multiply per tile) so HBM traffic is the int8 bytes + scales —
     the fused memory win the paper's future-work section points at.
 
-    ks_ref, vs_ref: (1, page) f32 absmax scales for this page."""
+    ks_ref, vs_ref: (1, page) f32 absmax scales for this physical page."""
+    b = pl.program_id(0)
     p = pl.program_id(2)
 
     @pl.when(p == 0)
@@ -102,10 +114,11 @@ def _paged_attn_kernel_int8(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref,
     v = v_ref[...].astype(jnp.float32) * (vs_ref[0, :] / 127.0)[:, None]
     pos = pos_ref[0, :]
     cur = curpos_ref[0, 0]
+    mapped = bt_ref[b, p] >= 0
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    valid = (pos >= 0) & (pos <= cur)
+    valid = mapped & (pos >= 0) & (pos <= cur)
     if window > 0:
         valid &= pos > (cur - window)
     s = jnp.where(valid[None, :], s, NEG_INF)
@@ -128,80 +141,103 @@ def _paged_attn_kernel_int8(q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref,
                       jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
 
 
+def _pool_index(bt_ref, b, p):
+    """Physical page id for (request b, logical slot p); clamped so unmapped
+    slots DMA pool page 0 (masked in the kernel body)."""
+    return jnp.maximum(bt_ref[b, p], 0)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
-def paged_attention_kernel_int8(q, k_pages, v_pages, k_scales, v_scales, pos,
-                                cur_pos, *, window: int = 0,
-                                scale: float | None = None,
-                                interpret: bool = True):
-    """q: (B, KV, G, hd) f32/bf16; k_pages/v_pages: (B, KV, P, page, hd) int8;
-    k_scales/v_scales: (B, KV, P, page) f32; pos: (B, P, page) int32."""
+def paged_attention_kernel(q, k_pool, v_pool, pos, block_table, cur_pos, *,
+                           window: int = 0, scale: float | None = None,
+                           interpret: bool = True):
+    """q: (B, KV, G, hd); k_pool/v_pool: (KV, N_pool, page, hd);
+    pos: (N_pool, page) int32; block_table: (B, P) int32;
+    cur_pos: (B,) int32 -> (B, KV, G, hd)."""
     B, KV, G, hd = q.shape
-    P, page = k_pages.shape[2], k_pages.shape[3]
+    page = k_pool.shape[2]
+    P = block_table.shape[1]
     scale = scale if scale is not None else hd ** -0.5
-    kernel = functools.partial(_paged_attn_kernel_int8, num_pages=P,
-                               window=window, scale=scale)
-    return pl.pallas_call(
-        kernel,
+    kernel = functools.partial(_paged_attn_kernel, num_pages=P, window=window,
+                               scale=scale)
+
+    def kv_map(b, h, p, bt):
+        return (h, _pool_index(bt, b, p), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B, KV, P),
         in_specs=[
-            pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
-            pl.BlockSpec((None, None, None, page, hd),
-                         lambda b, h, p: (b, h, p, 0, 0)),
-            pl.BlockSpec((None, None, None, page, hd),
-                         lambda b, h, p: (b, h, p, 0, 0)),
-            pl.BlockSpec((None, None, 1, page), lambda b, h, p: (b, h, p, 0)),
-            pl.BlockSpec((None, None, 1, page), lambda b, h, p: (b, h, p, 0)),
-            pl.BlockSpec((None, 1, page), lambda b, h, p: (b, p, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
+            pl.BlockSpec((None, None, G, hd), lambda b, h, p, bt: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, page, hd), kv_map),
+            pl.BlockSpec((None, None, page, hd), kv_map),
+            pl.BlockSpec((1, page),
+                         lambda b, h, p, bt: (_pool_index(bt, b, p), 0)),
+            pl.BlockSpec((1, 1), lambda b, h, p, bt: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        out_specs=pl.BlockSpec((None, None, G, hd),
+                               lambda b, h, p, bt: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 128), jnp.float32),
             pltpu.VMEM((G, 128), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(q.reshape(B, KV, G, hd), k_pages, v_pages, k_scales, v_scales, pos,
+    )(block_table, q.reshape(B, KV, G, hd), k_pool, v_pool, pos,
       cur_pos.reshape(B, 1))
 
 
 @functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
-def paged_attention_kernel(q, k_pages, v_pages, pos, cur_pos, *, window: int = 0,
-                           scale: float | None = None, interpret: bool = True):
-    """q: (B, KV, G, hd); k_pages/v_pages: (B, KV, P, page, hd);
-    pos: (B, P, page) int32; cur_pos: (B,) int32 -> (B, KV, G, hd)."""
+def paged_attention_kernel_int8(q, k_pool, v_pool, k_scales, v_scales, pos,
+                                block_table, cur_pos, *, window: int = 0,
+                                scale: float | None = None,
+                                interpret: bool = True):
+    """q: (B, KV, G, hd) f32/bf16; k_pool/v_pool: (KV, N_pool, page, hd) int8;
+    k_scales/v_scales: (KV, N_pool, page) f32; pos: (N_pool, page) int32;
+    block_table: (B, P) int32."""
     B, KV, G, hd = q.shape
-    P, page = k_pages.shape[2], k_pages.shape[3]
+    page = k_pool.shape[2]
+    P = block_table.shape[1]
     scale = scale if scale is not None else hd ** -0.5
+    kernel = functools.partial(_paged_attn_kernel_int8, num_pages=P,
+                               window=window, scale=scale)
 
-    kernel = functools.partial(_paged_attn_kernel, num_pages=P, window=window,
-                               scale=scale)
-    grid = (B, KV, P)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
+    def kv_map(b, h, p, bt):
+        return (h, _pool_index(bt, b, p), 0, 0)
+
+    def scale_map(b, h, p, bt):
+        return (h, _pool_index(bt, b, p), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, P),
         in_specs=[
-            pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
-            pl.BlockSpec((None, None, None, page, hd),
-                         lambda b, h, p: (b, h, p, 0, 0)),
-            pl.BlockSpec((None, None, None, page, hd),
-                         lambda b, h, p: (b, h, p, 0, 0)),
-            pl.BlockSpec((None, 1, page), lambda b, h, p: (b, p, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, p: (b, 0)),
+            pl.BlockSpec((None, None, G, hd), lambda b, h, p, bt: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, page, hd), kv_map),
+            pl.BlockSpec((None, None, page, hd), kv_map),
+            pl.BlockSpec((None, 1, page), scale_map),
+            pl.BlockSpec((None, 1, page), scale_map),
+            pl.BlockSpec((1, page),
+                         lambda b, h, p, bt: (_pool_index(bt, b, p), 0)),
+            pl.BlockSpec((1, 1), lambda b, h, p, bt: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((None, None, G, hd), lambda b, h, p: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        out_specs=pl.BlockSpec((None, None, G, hd),
+                               lambda b, h, p, bt: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 128), jnp.float32),
             pltpu.VMEM((G, 128), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        interpret=interpret,
-    )(
-        q.reshape(B, KV, G, hd),
-        k_pages, v_pages,
-        pos,
-        cur_pos.reshape(B, 1),
     )
-    return out
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, q.reshape(B, KV, G, hd), k_pool, v_pool, k_scales,
+      v_scales, pos, cur_pos.reshape(B, 1))

@@ -9,7 +9,7 @@ _EPS = 1e-6
 
 def paged_attention_ref(q, k_pages, v_pages, pos, cur_pos, *, window: int = 0,
                         scale: float | None = None):
-    """Same signature/layout as kernels.paged_attention.paged_attention_kernel.
+    """Dense per-request paged attention oracle (no indirection).
 
     q: (B, KV, G, hd); k_pages/v_pages: (B, KV, P, page, hd);
     pos: (B, P, page); cur_pos: (B,) -> (B, KV, G, hd).
@@ -30,8 +30,35 @@ def paged_attention_ref(q, k_pages, v_pages, pos, cur_pos, *, window: int = 0,
     return jnp.einsum("bkgs,bksd->bkgd", p, vf).astype(q.dtype)
 
 
+def gather_block_table(k_pool, v_pool, pos, block_table):
+    """Materialize the per-request dense view of a page pool.
+
+    k_pool/v_pool: (KV, N, page, hd); pos: (N, page); block_table: (B, P)
+    -> k/v (B, KV, P, page, hd), pos (B, P, page) with unmapped slots -1.
+    The gather the Pallas kernel avoids — used only to feed the dense oracle.
+    """
+    mapped = block_table >= 0                        # (B, P)
+    phys = jnp.maximum(block_table, 0)
+    kg = jnp.moveaxis(jnp.take(k_pool, phys, axis=1), 0, 1)  # (B, KV, P, page, hd)
+    vg = jnp.moveaxis(jnp.take(v_pool, phys, axis=1), 0, 1)
+    pg = jnp.where(mapped[..., None], jnp.take(pos, phys, axis=0), -1)
+    return kg, vg, pg
+
+
+def paged_attention_block_table_ref(q, k_pool, v_pool, pos, block_table,
+                                    cur_pos, *, window: int = 0,
+                                    scale: float | None = None):
+    """Same signature/layout as paged_attention.paged_attention_kernel:
+    gather the pool through the block table, then run the dense oracle."""
+    kg, vg, pg = gather_block_table(k_pool, v_pool, pos, block_table)
+    return paged_attention_ref(q, kg, vg, pg, cur_pos, window=window,
+                               scale=scale)
+
+
 def block_score_ref(k_pages, v_pages, pos):
-    """k_pages, v_pages: (B, P, page, KV, hd); pos: (B, P, page) -> (B, P)."""
+    """k_pages, v_pages: (..., page, KV, hd); pos: (..., page) -> (...,).
+    Works on the physical pool layout (N, page, KV, hd) -> (N,) as well as
+    gathered per-request views (B, P, page, KV, hd) -> (B, P)."""
     kn = jnp.linalg.norm(k_pages.astype(jnp.float32), axis=-1)  # (B,P,page,KV)
     vn = jnp.linalg.norm(v_pages.astype(jnp.float32), axis=-1)
     tok = jnp.mean(vn, axis=-1) / jnp.maximum(jnp.mean(kn, axis=-1), _EPS)

@@ -158,12 +158,14 @@ def paged_attention_ref(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
     Returns (B, H, hd).
     """
     B, H, hd = q.shape
-    P, page, KV = cache.k.shape[1], cache.k.shape[2], cache.k.shape[3]
+    P, page, KV = cache.num_pages, cache.page_size, cache.k.shape[2]
     G = H // KV
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    kf = cache.k_dequant().reshape(B, P * page, KV, hd)
-    vf = cache.v_dequant().reshape(B, P * page, KV, hd)
-    pos = cache.pos.reshape(B, P * page)
+    # gather the shared pool into this request's logical view (the pure-jnp
+    # oracle materializes the indirection the Pallas kernel streams)
+    kf = cache.k_view().reshape(B, P * page, KV, hd)
+    vf = cache.v_view().reshape(B, P * page, KV, hd)
+    pos = cache.pos_view().reshape(B, P * page)
     qg = q.reshape(B, KV, G, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                    kf.astype(jnp.float32)) * scale

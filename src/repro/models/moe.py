@@ -37,6 +37,20 @@ class MoEStats(NamedTuple):
     aux_loss: jax.Array      # () load-balance auxiliary loss (Switch-style)
 
 
+def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
+    """Version-portable shard_map: new jax exposes ``jax.shard_map`` with
+    ``axis_names`` (manual set); 0.4.x has ``jax.experimental.shard_map``
+    with the complementary ``auto`` set."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
 def init_moe(key, cfg: ModelConfig):
     dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
     E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
@@ -232,11 +246,11 @@ def moe_forward(params, cfg: ModelConfig, x, capacity: int | None = None,
             "w_up": P("expert", None, "tp"),
             "w_down": P("expert", "tp", None),
         }
-        out, load, dropped, aux = jax.shard_map(
-            local, mesh=mesh,
+        out, load, dropped, aux = _shard_map(
+            local, mesh,
             in_specs=(pspec, P(bax_e, None, None)),
             out_specs=(P(bax_e, None, None), P(), P(), P()),
-            axis_names=set(manual), check_vma=False)(params, x)
+            manual_axes=manual)(params, x)
         return out, MoEStats(load, dropped, aux)
 
     model_ok = (mesh is not None and "model" in mesh.shape
@@ -260,11 +274,11 @@ def moe_forward(params, cfg: ModelConfig, x, capacity: int | None = None,
             "w_up": P(None, None, "model"),
             "w_down": P(None, "model", None),
         }
-        out, load, dropped, aux = jax.shard_map(
-            local, mesh=mesh,
+        out, load, dropped, aux = _shard_map(
+            local, mesh,
             in_specs=(pspec, P(bax, None, None)),
             out_specs=(P(bax, None, None), P(), P(), P()),
-            axis_names=set(manual), check_vma=False)(params, x)
+            manual_axes=manual)(params, x)
         return out, MoEStats(load, dropped, aux)
 
     out, load, dropped, aux = block(params, x)

@@ -294,6 +294,50 @@ def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 # ---------------------------------------------------------------------------
+# request insertion (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _splice_layer_caches(batch_lc: LayerCaches, single_lc: LayerCaches,
+                         slot: int, stacked: bool) -> LayerCaches:
+    """Splice one prefilled (batch-1) layer cache into the batch cache.
+
+    Paged KV caches splice through the page pool (free old row, allocate
+    fresh pages, copy, rewrite the block-table row — paged_cache.
+    insert_request); recurrent states / static cross-KV are plain
+    batch-row writes. ``stacked``: leaves carry a leading (R,) repetition
+    dim (pattern slots) — the pool splice is vmapped over it."""
+    from repro.core.paged_cache import insert_request
+
+    kv = batch_lc.kv
+    if kv is not None:
+        ins = lambda b_kv, s_kv: insert_request(b_kv, s_kv, slot)
+        kv = jax.vmap(ins)(kv, single_lc.kv) if stacked \
+            else ins(kv, single_lc.kv)
+
+    def splice(b, s):
+        if stacked:
+            return b.at[:, slot].set(s[:, 0].astype(b.dtype))
+        return b.at[slot].set(s[0].astype(b.dtype))
+
+    rest = {}
+    for f in ("xattn", "mamba", "mlstm", "slstm"):
+        bf, sf = getattr(batch_lc, f), getattr(single_lc, f)
+        rest[f] = jax.tree.map(splice, bf, sf) if bf is not None else None
+    return LayerCaches(kv=kv, **rest)
+
+
+def insert_request_cache(batch_cache: "ModelCache", single_cache: "ModelCache",
+                         slot: int) -> "ModelCache":
+    """Splice a prefilled single-request ModelCache into batch row ``slot``."""
+    pattern = [_splice_layer_caches(bl, sl, slot, stacked=True)
+               for bl, sl in zip(batch_cache.pattern, single_cache.pattern)]
+    tail = [_splice_layer_caches(bl, sl, slot, stacked=False)
+            for bl, sl in zip(batch_cache.tail, single_cache.tail)]
+    cur_pos = batch_cache.cur_pos.at[slot].set(single_cache.cur_pos[0])
+    return ModelCache(pattern=pattern, tail=tail, cur_pos=cur_pos)
+
+
+# ---------------------------------------------------------------------------
 # prefill forward (build caches)
 # ---------------------------------------------------------------------------
 

@@ -2,16 +2,22 @@
 
 Three compiled programs:
   prefill : batch-1 prompt (padded to ``max_prompt_len``) -> per-slot cache
-  insert  : splice a prefilled single-request cache into the batch cache
+  insert  : splice a prefilled single-request cache into the batch cache —
+            with the shared page pool this frees the leaving request's
+            pages, allocates fresh ones from the free list, and rewrites
+            ONE block-table row (O(P) page copies, no slab transfer)
   decode  : one token for every active slot (static batch) + sampling
 
 The eviction policy is a constructor argument — the paper's PagedEviction,
 any baseline, or ``full``. Because every policy statically bounds the
-per-request slab, admission can never over-commit HBM (DESIGN.md §2).
+per-request block table and the pool is sized for the full batch,
+admission can never over-commit HBM (DESIGN.md §2); pages a request evicts
+return to the SHARED free list and become headroom for every other request.
 
 Telemetry per step: pages/tokens evicted, forced (fragmentation) evictions,
 wall time — the benchmarks build the paper's throughput/TPOT/overhead
-tables from these.
+tables from these. :meth:`Engine.pool_stats` reports fleet-level pool
+occupancy (free vs mapped physical pages across layers).
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ from repro.models.transformer import (
     decode_step,
     forward_prefill,
     init_decode_caches,
+    insert_request_cache,
 )
 from repro.serving.request import Request, RequestStatus, SamplingParams
 from repro.serving.sampler import sample_tokens
@@ -89,21 +96,9 @@ class Engine:
                                use_pallas=self.use_pallas)
 
     def _insert_impl(self, batch_cache, single_cache, *, slot: int):
-        # pattern-slot leaves are stacked (R, B, ...): batch is axis 1;
-        # tail leaves and cur_pos have batch at axis 0.
-        def splice_b0(b, s):
-            return b.at[slot].set(s[0].astype(b.dtype))
-
-        def splice_b1(b, s):
-            return b.at[:, slot].set(s[:, 0].astype(b.dtype))
-
-        from repro.models.transformer import ModelCache
-        return ModelCache(
-            pattern=jax.tree.map(splice_b1, batch_cache.pattern,
-                                 single_cache.pattern),
-            tail=jax.tree.map(splice_b0, batch_cache.tail, single_cache.tail),
-            cur_pos=splice_b0(batch_cache.cur_pos, single_cache.cur_pos),
-        )
+        # paged KV leaves splice through the shared pool's block tables;
+        # recurrent / cross-attn states are plain batch-row writes
+        return insert_request_cache(batch_cache, single_cache, slot)
 
     def _decode_impl(self, params, tokens, cache, active, key):
         logits, cache = decode_step(params, self.cfg, tokens, cache,
@@ -191,3 +186,17 @@ class Engine:
         while self.step() and steps < max_steps:
             steps += 1
         return self.scheduler.finished
+
+    def pool_stats(self) -> dict:
+        """Fleet-level page-pool occupancy, aggregated over attention layers:
+        total physical pages, pages on the free list, and utilization —
+        the memory-reclamation signal the benchmarks report."""
+        total = free = 0
+        for lc in list(self.cache.pattern) + list(self.cache.tail):
+            if lc.kv is None:
+                continue
+            ref = np.asarray(jax.device_get(lc.kv.ref_count))
+            total += ref.size
+            free += int((ref == 0).sum())
+        return {"pool_pages": total, "free_pages": free,
+                "utilization": (total - free) / total if total else 0.0}

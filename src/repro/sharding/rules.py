@@ -162,32 +162,54 @@ def _cache_spec(mesh: Mesh, cfg, path: str, shape: tuple, batch: int) -> P:
     msz = _ma_size(mesh)
     MA = model_axes(mesh)
     kv_div = msz > 1 and cfg.num_kv_heads % msz == 0
-    if name in ("k", "v") and len(rest) == 5:
-        # paged slab (B, P, page, KV, hd): shard kv heads when divisible;
-        # else shard the PAGE dim over "model" — decode context parallelism
-        # (each model shard holds 1/msz of the pages; softmax combines via
-        # small collectives). vLLM replicates KV when kv < tp — on TPU the
-        # page dim is the better axis (DESIGN.md §5).
-        if kv_div:
-            return spec(b, None, None, MA, None)
-        if rest[1] % msz == 0 and msz > 1:
-            return spec(b, MA, None, None, None)
-        return spec(b, None, None, None, None)
+
+    def _dp_axes(n: int):
+        """DP axes for the POOL dim — divides pool state evenly over the
+        data shards. NOTE: the allocator is locality-blind today (lowest
+        free index wins), so a request's pages may live on any shard;
+        shard-local allocation is future work (DESIGN.md §5)."""
+        if "pod" in mesh.shape and n % _axis_size(mesh, "pod", "data") == 0:
+            return ("pod", "data")
+        if _axis_size(mesh, "data") > 1 and n % _axis_size(mesh, "data") == 0:
+            return ("data",)
+        return ()
+
+    def _pool_dim0(n: int, take_model: bool):
+        """Axes tuple for the pool-page dim: DP axes, optionally folding the
+        model axes in (decode context parallelism: each model shard holds
+        1/msz of the pool; softmax combines via small collectives). vLLM
+        replicates KV when kv < tp — on TPU the pool dim is the better
+        axis (DESIGN.md §5)."""
+        dp = _dp_axes(n)
+        if take_model and msz > 1:
+            ma = MA if isinstance(MA, tuple) else (MA,)
+            if n % (int(np.prod([mesh.shape[a] for a in dp + ma]))) == 0:
+                return dp + ma
+        return dp
+
+    def _ax(t):
+        return None if not t else (t[0] if len(t) == 1 else t)
+
+    if name in ("k", "v") and len(rest) == 4 and "xattn" not in path:
+        # shared page pool (N, page, KV, hd): kv heads over "model" when
+        # divisible, else the model axes fold into the pool dim
+        d0 = _ax(_pool_dim0(rest[0], take_model=not kv_div))
+        return spec(d0, None, MA if kv_div else None, None)
     if name in ("k", "v") and len(rest) == 4:
         # static cross-attn KV (B, Sc, KV, hd)
         return spec(b, None, MA if kv_div else None, None)
-    if name in ("k_scale", "v_scale") and len(rest) == 4:
-        # (B, P, page, KV): follow the slab's sharding choice
-        if kv_div:
-            return spec(b, None, None, MA)
-        if rest[1] % msz == 0 and msz > 1:
-            return spec(b, MA, None, None)
-        return spec(b, None, None, None)
-    if name in ("pos", "score") and len(rest) == 3:
-        # follow the slab's page-dim sharding to avoid per-step resharding
-        if not kv_div and rest[1] % msz == 0 and msz > 1:
-            return spec(b, MA, None)
-        return spec(b, None, None)
+    if name in ("k_scale", "v_scale") and len(rest) == 3:
+        # (N, page, KV): follow the pool's sharding choice
+        d0 = _ax(_pool_dim0(rest[0], take_model=not kv_div))
+        return spec(d0, None, MA if kv_div else None)
+    if name in ("pos", "score") and len(rest) == 2:
+        # (N, page): follow the pool-dim sharding to avoid resharding
+        d0 = _ax(_pool_dim0(rest[0], take_model=not kv_div))
+        return spec(d0, None)
+    if name == "ref_count" and len(rest) == 1:
+        return spec(_ax(_pool_dim0(rest[0], take_model=not kv_div)))
+    if name == "block_table" and len(rest) == 2:
+        return spec(b, None)
     if name in ("cur_page", "cur_off", "cur_pos"):
         return spec(b)
     if name == "conv":                 # (B, dc-1, di)

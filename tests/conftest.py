@@ -7,6 +7,13 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, CacheConfig
 
 
+def pytest_collection_modifyitems(config, items):
+    """Everything not explicitly marked slow is the fast (CI) tier."""
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.fast)
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

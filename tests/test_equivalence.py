@@ -24,6 +24,8 @@ from repro.models import mamba as mamba_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.common import blocked_causal_attention, full_causal_attention
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 EQ_ARCHS = ["qwen2.5-3b", "stablelm-3b", "gemma3-27b", "mixtral-8x7b",
             "jamba-1.5-large-398b", "xlstm-1.3b", "musicgen-medium",
             "chameleon-34b"]

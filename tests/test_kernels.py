@@ -9,11 +9,29 @@ from repro.kernels.block_score import block_score_kernel
 from repro.kernels.flash_prefill import flash_attention_kernel
 from repro.kernels.paged_attention import paged_attention_kernel
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 
 def _tol(dtype):
     return TOLS[jnp.bfloat16] if dtype == jnp.bfloat16 else TOLS[jnp.float32]
+
+
+def _random_pool(key, B, KV, hd, P, page, dtype, unmapped=0):
+    """Pool arrays + a scrambled block table (each request maps P distinct
+    physical pages out of an oversized pool, optionally with unmapped
+    holes)."""
+    N = B * P + 3                      # spare free pages in the pool
+    ks = jax.random.split(key, 4)
+    kp = jax.random.normal(ks[0], (KV, N, page, hd), dtype)
+    vp = jax.random.normal(ks[1], (KV, N, page, hd), dtype)
+    pos = jax.random.randint(ks[2], (N, page), -1, P * page)
+    perm = jax.random.permutation(ks[3], N)[:B * P].reshape(B, P)
+    bt = perm.astype(jnp.int32)
+    for i in range(unmapped):
+        bt = bt.at[i % B, (7 * i) % P].set(-1)
+    return kp, vp, pos, bt
 
 
 @pytest.mark.parametrize("B,KV,G,hd,P,page", [
@@ -25,14 +43,13 @@ def _tol(dtype):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_paged_attention_sweep(B, KV, G, hd, P, page, dtype):
     key = jax.random.PRNGKey(B * 100 + P)
-    ks = jax.random.split(key, 4)
-    q = jax.random.normal(ks[0], (B, KV, G, hd), dtype)
-    kp = jax.random.normal(ks[1], (B, KV, P, page, hd), dtype)
-    vp = jax.random.normal(ks[2], (B, KV, P, page, hd), dtype)
-    pos = jax.random.randint(ks[3], (B, P, page), -1, P * page)
+    kq, kpool = jax.random.split(key)
+    q = jax.random.normal(kq, (B, KV, G, hd), dtype)
+    kp, vp, pos, bt = _random_pool(kpool, B, KV, hd, P, page, dtype,
+                                   unmapped=2)
     cur = jnp.full((B,), P * page, jnp.int32)
-    out = paged_attention_kernel(q, kp, vp, pos, cur)
-    exp = ref.paged_attention_ref(q, kp, vp, pos, cur)
+    out = paged_attention_kernel(q, kp, vp, pos, bt, cur)
+    exp = ref.paged_attention_block_table_ref(q, kp, vp, pos, bt, cur)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=_tol(dtype),
                                rtol=_tol(dtype))
@@ -43,47 +60,57 @@ def test_paged_attention_window_and_causality():
     B, KV, G, hd, P, page = 2, 2, 2, 64, 4, 8
     ks = jax.random.split(key, 4)
     q = jax.random.normal(ks[0], (B, KV, G, hd))
-    kp = jax.random.normal(ks[1], (B, KV, P, page, hd))
-    vp = jax.random.normal(ks[2], (B, KV, P, page, hd))
-    pos = jnp.broadcast_to(jnp.arange(P * page, dtype=jnp.int32).reshape(P, page),
-                           (B, P, page))
+    N = B * P
+    kp = jax.random.normal(ks[1], (KV, N, page, hd))
+    vp = jax.random.normal(ks[2], (KV, N, page, hd))
+    # request b maps pages [b*P .. b*P+P), each holding positions 0..P*page
+    bt = (jnp.arange(B, dtype=jnp.int32)[:, None] * P +
+          jnp.arange(P, dtype=jnp.int32)[None, :])
+    pos = jnp.tile(jnp.arange(P * page, dtype=jnp.int32).reshape(P, page),
+                   (B, 1))
     cur = jnp.array([15, 20], jnp.int32)      # mask future positions
     for w in (0, 8):
-        out = paged_attention_kernel(q, kp, vp, pos, cur, window=w)
-        exp = ref.paged_attention_ref(q, kp, vp, pos, cur, window=w)
+        out = paged_attention_kernel(q, kp, vp, pos, bt, cur, window=w)
+        exp = ref.paged_attention_block_table_ref(q, kp, vp, pos, bt, cur,
+                                                  window=w)
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
 
 
-def test_paged_attention_ignores_evicted_pages():
-    """Zeroing a page's positions must equal physically removing it."""
+def test_paged_attention_ignores_unmapped_slots():
+    """Unmapping a block-table slot must equal physically removing its page
+    — even when the freed physical page still holds another request's
+    plausible-looking positions (the stale-pool hazard)."""
     key = jax.random.PRNGKey(9)
     B, KV, G, hd, P, page = 1, 1, 2, 64, 4, 8
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, KV, G, hd))
-    kp = jax.random.normal(ks[1], (B, KV, P, page, hd))
-    vp = jax.random.normal(ks[2], (B, KV, P, page, hd))
-    pos = jnp.broadcast_to(jnp.arange(P * page, dtype=jnp.int32).reshape(P, page),
-                           (B, P, page))
+    N = P + 2
+    kp = jax.random.normal(ks[1], (KV, N, page, hd))
+    vp = jax.random.normal(ks[2], (KV, N, page, hd))
+    pos = jnp.tile(jnp.arange(P * page, dtype=jnp.int32).reshape(P, page),
+                   (1, 1)).reshape(P, page)
+    pos = jnp.concatenate([pos, jnp.zeros((2, page), jnp.int32)], 0)  # stale
     cur = jnp.full((B,), P * page, jnp.int32)
-    evicted = pos.at[:, 1].set(-1)
-    out = paged_attention_kernel(q, kp, vp, evicted, cur)
-    exp = ref.paged_attention_ref(q, kp[:, :, [0, 2, 3]], vp[:, :, [0, 2, 3]],
-                                  pos[:, [0, 2, 3]], cur)
+    bt_full = jnp.arange(P, dtype=jnp.int32)[None, :]
+    bt_holed = bt_full.at[0, 1].set(-1)
+    out = paged_attention_kernel(q, kp, vp, pos, bt_holed, cur)
+    exp = ref.paged_attention_block_table_ref(
+        q, kp, vp, pos, jnp.asarray([[0, 2, 3]], jnp.int32), cur)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
 
 
-@pytest.mark.parametrize("B,P,page,KV,hd", [
-    (1, 2, 8, 1, 64),
-    (2, 4, 16, 2, 128),
-    (2, 3, 16, 8, 64),
+@pytest.mark.parametrize("N,page,KV,hd", [
+    (2, 8, 1, 64),
+    (8, 16, 2, 128),
+    (6, 16, 8, 64),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_block_score_sweep(B, P, page, KV, hd, dtype):
-    key = jax.random.PRNGKey(P * 10 + KV)
+def test_block_score_sweep(N, page, KV, hd, dtype):
+    key = jax.random.PRNGKey(N * 10 + KV)
     ks = jax.random.split(key, 3)
-    kp = jax.random.normal(ks[0], (B, P, page, KV, hd), dtype)
-    vp = jax.random.normal(ks[1], (B, P, page, KV, hd), dtype)
-    pos = jax.random.randint(ks[2], (B, P, page), -1, 50)
+    kp = jax.random.normal(ks[0], (N, page, KV, hd), dtype)
+    vp = jax.random.normal(ks[1], (N, page, KV, hd), dtype)
+    pos = jax.random.randint(ks[2], (N, page), -1, 50)
     out = np.asarray(block_score_kernel(kp, vp, pos))
     exp = np.asarray(ref.block_score_ref(kp, vp, pos))
     fin = np.isfinite(exp)

@@ -21,6 +21,8 @@ from repro.models import (
 )
 from repro.training import AdamWConfig, init_adamw, make_train_step, lm_batch, DataConfig
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 ARCH_IDS = sorted(ASSIGNED_ARCHS)
 
 

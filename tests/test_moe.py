@@ -16,6 +16,8 @@ from repro.models.moe import (
 )
 from repro.sharding import rules
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 
 @pytest.fixture(scope="module")
 def moe_cfg():

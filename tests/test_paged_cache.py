@@ -1,4 +1,4 @@
-"""Unit tests for the functional paged KV cache."""
+"""Unit tests for the functional pooled paged KV cache."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +10,15 @@ def _cache(B=2, P=4, page=4, KV=2, hd=8):
     return pc.init_layer_cache(B, P, page, KV, hd, jnp.float32)
 
 
+def test_init_premaps_working_page():
+    c = _cache()
+    bt = np.asarray(c.block_table)
+    np.testing.assert_array_equal(bt[:, 0], [0, 1])      # distinct pool pages
+    assert (bt[:, 1:] == -1).all()
+    assert int(c.num_free()) == c.pool_pages - 2
+    assert c.pool_pages == 2 * 4
+
+
 def test_write_token_places_at_head():
     c = _cache()
     B, KV, hd = 2, 2, 8
@@ -17,8 +26,8 @@ def test_write_token_places_at_head():
     v = 2 * jnp.ones((B, KV, hd))
     c = pc.write_token(c, k, v, jnp.array([0, 0]), jnp.array([1.0, 2.0]))
     assert int(c.cur_off[0]) == 1
-    np.testing.assert_array_equal(np.asarray(c.pos[:, 0, 0]), [0, 0])
-    assert float(c.score[1, 0, 0]) == 2.0
+    np.testing.assert_array_equal(np.asarray(c.pos_view()[:, 0, 0]), [0, 0])
+    assert float(c.score_view()[1, 0, 0]) == 2.0
     assert int(c.total_valid()[0]) == 1
 
 
@@ -42,17 +51,34 @@ def test_page_scores_mean_and_inf_for_empty():
     assert np.isinf(ps[:, 1:]).all()
 
 
-def test_evict_page_and_reuse():
+def test_evict_page_returns_to_free_list():
     c = _cache()
     for i in range(4):
         c = pc.write_token(c, jnp.ones((2, 2, 8)), jnp.ones((2, 2, 8)),
                            jnp.full((2,), i), jnp.zeros(2))
+    free_before = int(c.num_free())
     c = pc.evict_page(c, jnp.array([0, 0]))
     assert int(c.total_valid()[0]) == 0
-    idx, exists = pc.find_free_page(c)
-    assert bool(exists.all())
-    c = pc.start_new_page(c, idx)
-    assert int(c.cur_off[0]) == 0
+    assert int(c.num_free()) == free_before + 2    # both pages back in pool
+    assert (np.asarray(c.block_table)[:, 0] == -1).all()
+    # the freed physical pages hold no live tokens (invariant F4)
+    ref = np.asarray(c.ref_count)
+    assert (np.asarray(c.pos)[ref == 0] == -1).all()
+    # and can be re-allocated
+    c2, phys, ok = pc.alloc_pages(c, jnp.array([True, True]))
+    assert bool(ok.all())
+    assert len(set(np.asarray(phys).tolist())) == 2
+
+
+def test_alloc_pages_distinct_and_bounded():
+    c = _cache(B=3, P=2)                            # pool = 6, 3 pre-mapped
+    c, phys, ok = pc.alloc_pages(c, jnp.array([True, False, True]))
+    p = np.asarray(phys)
+    assert bool(ok[0]) and not bool(ok[1]) and bool(ok[2])
+    assert p[0] != p[2] and p[1] == c.pool_pages    # sentinel where not needed
+    # exhaust the pool: only 1 free page left now
+    c, phys2, ok2 = pc.alloc_pages(c, jnp.array([True, True, True]))
+    assert int(np.asarray(ok2).sum()) == 1
 
 
 def test_evict_token_flat_index():
@@ -60,13 +86,31 @@ def test_evict_token_flat_index():
     for i in range(6):                              # fills page0 + 2 of page1
         c = pc.write_token(c, jnp.ones((2, 2, 8)), jnp.ones((2, 2, 8)),
                            jnp.full((2,), i), jnp.zeros(2))
-        out = c
         if int(c.cur_off[0]) == c.page_size:
-            c = pc.start_new_page(c, jnp.array([1, 1]))
+            c2, phys, ok = pc.alloc_pages(c, jnp.ones((2,), bool))
+            c = pc.start_new_page(c2, jnp.array([1, 1]), phys, ok)
     c = pc.evict_token(c, jnp.array([2, 5]))        # page0/off2 ; page1/off1
-    pos = np.asarray(c.pos)
+    pos = np.asarray(c.pos_view())
     assert pos[0, 0, 2] == -1 and pos[1, 1, 1] == -1
     assert int(c.total_valid()[0]) == 5
+
+
+def test_reclaim_empty_pages():
+    c = _cache()
+    for i in range(4):
+        c = pc.write_token(c, jnp.ones((2, 2, 8)), jnp.ones((2, 2, 8)),
+                           jnp.full((2,), i), jnp.zeros(2))
+    c2, phys, ok = pc.alloc_pages(c, jnp.ones((2,), bool))
+    c = pc.start_new_page(c2, jnp.array([1, 1]), phys, ok)
+    # token-evict page 0 empty, one token at a time (stays mapped)
+    for j in range(4):
+        c = pc.evict_token(c, jnp.array([j, j]))
+    assert (np.asarray(c.block_table)[:, 0] >= 0).all()
+    c = pc.reclaim_empty_pages(c)
+    assert (np.asarray(c.block_table)[:, 0] == -1).all()
+    ref = np.asarray(c.ref_count)
+    mapped = np.asarray(c.block_table)
+    assert int((ref > 0).sum()) == (mapped >= 0).sum()
 
 
 def test_to_contiguous_roundtrip():
@@ -91,6 +135,44 @@ def test_write_prompt_pages_layout():
     c = pc.write_prompt_pages(c, k, k, pos, score)
     assert int(c.cur_page[0]) == 2 and int(c.cur_off[0]) == 0
     assert int(c.total_valid()[0]) == C
-    np.testing.assert_array_equal(np.asarray(c.pos[0, 0]), [0, 1, 2, 3])
-    np.testing.assert_array_equal(np.asarray(c.pos[0, 1]), [4, 5, 6, 7])
+    pv = np.asarray(c.pos_view())
+    np.testing.assert_array_equal(pv[0, 0], [0, 1, 2, 3])
+    np.testing.assert_array_equal(pv[0, 1], [4, 5, 6, 7])
     assert np.isinf(np.asarray(c.page_scores())[0, 2:]).all()
+    # the decode working page is mapped (so write_token has a target), and
+    # block tables never share physical pages
+    bt = np.asarray(c.block_table)
+    assert (bt[:, :3] >= 0).all() and (bt[:, 3] == -1).all()
+    mapped = bt[bt >= 0]
+    assert len(mapped) == len(set(mapped.tolist()))
+
+
+def test_insert_request_splices_row():
+    B, P, page = 3, 3, 4
+    dst = _cache(B=B, P=P, page=page)
+    rng = jax.random.PRNGKey(0)
+    for i in range(3):
+        rng, k1 = jax.random.split(rng)
+        dst = pc.write_token(dst, jax.random.normal(k1, (B, 2, 8)),
+                             jnp.ones((B, 2, 8)), jnp.full((B,), i),
+                             jnp.zeros(B))
+    src = _cache(B=1, P=P, page=page)
+    for i in range(2):
+        rng, k1 = jax.random.split(rng)
+        src = pc.write_token(src, jax.random.normal(k1, (1, 2, 8)),
+                             jnp.ones((1, 2, 8)), jnp.full((1,), i),
+                             jnp.zeros(1))
+    out = pc.insert_request(dst, src, 1)
+    np.testing.assert_array_equal(np.asarray(out.pos_view()[1]),
+                                  np.asarray(src.pos_view()[0]))
+    np.testing.assert_array_equal(np.asarray(out.pos_view()[0]),
+                                  np.asarray(dst.pos_view()[0]))
+    m = np.asarray(out.valid_mask()[1])[..., None, None]
+    np.testing.assert_allclose(np.asarray(out.k_view()[1]) * m,
+                               np.asarray(src.k_view()[0]) * m, atol=1e-6)
+    # free-list conservation after the splice
+    ref = np.asarray(out.ref_count)
+    bt = np.asarray(out.block_table)
+    mapped = bt[bt >= 0]
+    assert len(mapped) == len(set(mapped.tolist()))
+    assert int((ref > 0).sum()) + int(out.num_free()) == out.pool_pages

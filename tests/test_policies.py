@@ -84,7 +84,7 @@ def test_paged_eviction_evicts_lowest_scoring_page():
         cache = out.cache
     # after the 12th write the budget (8) is exceeded -> page0 (score 0.1)
     # must be the victim: its positions 0..3 are gone
-    live = set(np.asarray(cache.pos).ravel().tolist()) - {-1}
+    live = set(np.asarray(cache.pos_view()).ravel().tolist()) - {-1}
     assert live.isdisjoint({0, 1, 2, 3})
     assert {4, 5, 6, 7}.issubset(live)
 
@@ -102,7 +102,7 @@ def test_full_cache_never_evicts():
 
 def test_streaming_llm_keeps_sinks_and_recent():
     cache, _, cfg = _run_decode("streaming_llm", steps=50, budget=16)
-    pos = np.asarray(cache.pos)
+    pos = np.asarray(cache.pos_view())
     for b in range(pos.shape[0]):
         live = set(pos[b].ravel().tolist()) - {-1}
         for s in range(cfg.num_sink_tokens):
@@ -129,7 +129,7 @@ def test_unstructured_evicts_lowest_score_token():
         out = decode_append(cache, s * jnp.ones((1, 1, 4)), jnp.ones((1, 1, 4)),
                             jnp.array([t]), pol, cfg)
         cache = out.cache
-    live = set(np.asarray(cache.pos).ravel().tolist()) - {-1}
+    live = set(np.asarray(cache.pos_view()).ravel().tolist()) - {-1}
     assert 8 not in live                 # evicted immediately (highest ||k||)
 
 
@@ -157,7 +157,7 @@ def test_keydiff_prefers_diverse_keys():
     out = decode_append(cache, ortho, jnp.ones((1, 1, 4)),
                         jnp.array([8]), pol, cfg)
     cache = out.cache
-    live = set(np.asarray(cache.pos).ravel().tolist()) - {-1}
+    live = set(np.asarray(cache.pos_view()).ravel().tolist()) - {-1}
     assert 8 in live, "the diverse key must survive"
 
 
@@ -182,7 +182,7 @@ def test_prefill_compress_budget_and_order(policy):
     else:
         assert tv == cfg.cache_budget
     # retained tokens stay in position order within the slab
-    pos = np.asarray(cache.pos[0]).ravel()
+    pos = np.asarray(cache.pos_view()[0]).ravel()
     live = pos[pos >= 0]
     assert (np.diff(live) > 0).all()
 
@@ -197,7 +197,7 @@ def test_prefill_paged_eviction_keeps_top_scores():
     pol = get_policy("paged_eviction")
     cfg = _ccfg("paged_eviction", page=8, budget=16)
     cache = compress_and_page(k, v, positions, jnp.ones((B, S), bool), pol, cfg)
-    live = sorted(np.asarray(cache.pos[0]).ravel().tolist())
+    live = sorted(np.asarray(cache.pos_view()[0]).ravel().tolist())
     live = [p for p in live if p >= 0]
     assert live == list(range(16, 32)), "top-16 by ||v||/||k|| = last 16"
 

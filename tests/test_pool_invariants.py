@@ -1,0 +1,168 @@
+"""Shared page-pool invariants under random write/evict/rollover sequences.
+
+The free-list protocol (DESIGN.md §2) promises, after EVERY post_write:
+
+  F1  allocated + free == N_pool                (free-list conservation)
+  F2  ref_count[p] == #block-table entries mapping physical page p
+  F3  no physical page is mapped by two block-table entries at once
+  F4  free pages hold no live tokens (pos rows all -1)
+  B1  total_valid() <= cache_budget + page_size for every eviction policy
+      (the working page just filled is transiently over budget by at most
+      one page — the paper's Alg.3 semantics; `full` is exempt)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CacheConfig
+from repro.core import (
+    POLICIES,
+    decode_append,
+    evict_page,
+    get_policy,
+    init_layer_cache,
+    insert_request,
+)
+
+
+def _assert_pool_invariants(cache, ctx=""):
+    ref = np.asarray(cache.ref_count)
+    bt = np.asarray(cache.block_table)
+    mapped = bt[bt >= 0]
+    # F3: no double-mapping
+    assert len(mapped) == len(set(mapped.tolist())), (ctx, "double-mapped")
+    # F2: ref_count mirrors the block tables exactly
+    counts = np.bincount(mapped, minlength=cache.pool_pages)
+    np.testing.assert_array_equal(counts, ref, err_msg=f"{ctx}: refcounts")
+    # F1: conservation
+    assert int((ref > 0).sum()) + int((ref == 0).sum()) == cache.pool_pages
+    assert int((ref > 0).sum()) == len(mapped), (ctx, "conservation")
+    # F4: free pages are empty
+    pos = np.asarray(cache.pos)
+    assert (pos[ref == 0] == -1).all(), (ctx, "free page holds live tokens")
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pool_invariants_under_random_decode(policy, seed):
+    page, budget = 4, 16
+    pol = get_policy(policy)
+    cfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                      dtype="float32")
+    steps = 70
+    B = 3
+    cache = init_layer_cache(B, pol.slab_pages(cfg, steps), page, 2, 8,
+                             jnp.float32)
+    rng = jax.random.PRNGKey(seed)
+    for t in range(steps):
+        rng, k1, k2, k3 = jax.random.split(rng, 4)
+        # random active mask exercises partially-idle batches
+        active = jax.random.uniform(k3, (B,)) < 0.8
+        out = decode_append(cache, jax.random.normal(k1, (B, 2, 8)),
+                            jax.random.normal(k2, (B, 2, 8)),
+                            jnp.full((B,), t), pol, cfg, active=active)
+        cache = out.cache
+        _assert_pool_invariants(cache, f"{policy} step {t}")
+        if policy != "full":
+            tv = np.asarray(cache.total_valid())
+            assert (tv <= budget + page).all(), (policy, t, tv)
+
+
+@pytest.mark.parametrize("policy", ["paged_eviction", "streaming_llm"])
+def test_evicted_pages_become_other_requests_headroom(policy):
+    """The tentpole behavior: pages a retiring request releases must be
+    reusable by a DIFFERENT request (impossible under the old per-request
+    slabs, where freed slots stayed inside the owner's private slab)."""
+    page, budget = 4, 8
+    pol = get_policy(policy)
+    cfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                      dtype="float32")
+    B = 2
+    P = pol.slab_pages(cfg, 40)
+    cache = init_layer_cache(B, P, page, 1, 8, jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    for t in range(20):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        cache = decode_append(cache, jax.random.normal(k1, (B, 1, 8)),
+                              jax.random.normal(k2, (B, 1, 8)),
+                              jnp.full((B,), t), pol, cfg).cache
+    bt = np.asarray(cache.block_table)
+    req1_pages = set(bt[1][bt[1] >= 0].tolist())
+    assert req1_pages, "request 1 holds pages before retiring"
+    # retire request 1: every logical slot's page goes back to the pool
+    for slot in range(P):
+        cache = evict_page(cache, jnp.full((B,), slot),
+                           enable=jnp.array([False, True]))
+    _assert_pool_invariants(cache, "after retire")
+    # request 0 keeps decoding alone; its rollovers must pick up pages the
+    # retired request freed
+    req0_later = set()
+    for t in range(20, 40):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        cache = decode_append(cache, jax.random.normal(k1, (B, 1, 8)),
+                              jax.random.normal(k2, (B, 1, 8)),
+                              jnp.full((B,), t), pol, cfg,
+                              active=jnp.array([True, False])).cache
+        bt = np.asarray(cache.block_table)
+        req0_later.update(bt[0][bt[0] >= 0].tolist())
+    assert req0_later & req1_pages, (
+        "request 0 never reused a page the retired request freed — pool is "
+        "not actually shared")
+    _assert_pool_invariants(cache, "end")
+
+
+def test_explicit_evict_page_frees_and_insert_reuses():
+    """evict_page returns pages to the free list; insert_request draws from
+    it without disturbing other rows."""
+    page = 4
+    cache = init_layer_cache(3, 4, page, 1, 8, jnp.float32)
+    rng = jax.random.PRNGKey(2)
+    pol = get_policy("full")
+    cfg = CacheConfig(page_size=page, cache_budget=16, policy="full",
+                      dtype="float32")
+    for t in range(10):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        cache = decode_append(cache, jax.random.normal(k1, (3, 1, 8)),
+                              jax.random.normal(k2, (3, 1, 8)),
+                              jnp.full((3,), t), pol, cfg).cache
+    free0 = int(cache.num_free())
+    cache = evict_page(cache, jnp.array([0, 0, 0]),
+                       enable=jnp.array([True, False, False]))
+    assert int(cache.num_free()) == free0 + 1
+    _assert_pool_invariants(cache, "after explicit evict")
+
+    single = init_layer_cache(1, 4, page, 1, 8, jnp.float32)
+    for t in range(6):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        single = decode_append(single, jax.random.normal(k1, (1, 1, 8)),
+                               jax.random.normal(k2, (1, 1, 8)),
+                               jnp.full((1,), t), pol, cfg).cache
+    before_row2 = np.asarray(cache.pos_view()[2])
+    cache = insert_request(cache, single, 0)
+    _assert_pool_invariants(cache, "after insert")
+    np.testing.assert_array_equal(np.asarray(cache.pos_view()[0]),
+                                  np.asarray(single.pos_view()[0]))
+    np.testing.assert_array_equal(np.asarray(cache.pos_view()[2]), before_row2)
+
+
+def test_budget_bound_after_every_post_write():
+    """B1 for every registered eviction policy, long trace, page 8."""
+    page, budget = 8, 32
+    for policy in sorted(POLICIES):
+        if policy == "full":
+            continue
+        pol = get_policy(policy)
+        cfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                          dtype="float32")
+        cache = init_layer_cache(2, pol.slab_pages(cfg, 100), page, 1, 8,
+                                 jnp.float32)
+        rng = jax.random.PRNGKey(4)
+        for t in range(100):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            cache = decode_append(cache, jax.random.normal(k1, (2, 1, 8)),
+                                  jax.random.normal(k2, (2, 1, 8)),
+                                  jnp.full((2,), t), pol, cfg).cache
+            tv = np.asarray(cache.total_valid())
+            assert (tv <= budget + page).all(), (policy, t, tv)
+        _assert_pool_invariants(cache, policy)

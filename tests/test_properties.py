@@ -1,33 +1,47 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Property tests on the system's core invariants.
+
+``hypothesis`` is not installed in the offline CI container, so every
+property is written as a plain check function and driven two ways:
+
+  * when hypothesis IS available, @given explores the parameter space;
+  * otherwise a seeded ``jax.random`` fallback sweeps a fixed set of draws,
+    so the invariants still execute everywhere (pytest.importorskip guards
+    the hypothesis-only entry points).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.configs import CacheConfig
 from repro.core import decode_append, get_policy, init_layer_cache
 from repro.core import importance
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # offline container: seeded fallback below
+    HAVE_HYPOTHESIS = False
+
+_POLICIES = ["paged_eviction", "streaming_llm", "inverse_key_l2", "keydiff",
+             "full"]
 _SETTINGS = dict(max_examples=25, deadline=None)
 
 
-@given(
-    page=st.sampled_from([2, 4, 8]),
-    budget_pages=st.integers(2, 4),
-    steps=st.integers(1, 40),
-    policy=st.sampled_from(["paged_eviction", "streaming_llm",
-                            "inverse_key_l2", "keydiff", "full"]),
-    seed=st.integers(0, 2**16),
-)
-@settings(**_SETTINGS)
-def test_cache_invariants_under_any_decode_trace(page, budget_pages, steps,
-                                                 policy, seed):
+# ---------------------------------------------------------------------------
+# property bodies (engine-agnostic: called by hypothesis AND the fallback)
+# ---------------------------------------------------------------------------
+
+def check_cache_invariants_under_any_decode_trace(page, budget_pages, steps,
+                                                  policy, seed):
     """For ANY policy and ANY random decode trace:
     I1 live tokens never exceed budget + page (working page transient)
     I2 positions live in the cache are unique
     I3 the write head always points at a non-full page slot
     I4 cur_off in [0, page)
     I5 full policy: nothing is ever evicted
+    F1 allocated + free == N_pool (free-list conservation)
+    F3 no physical page mapped twice
     """
     budget = budget_pages * page
     pol = get_policy(policy)
@@ -49,7 +63,7 @@ def test_cache_invariants_under_any_decode_trace(page, budget_pages, steps,
             assert (tv == t + 1).all()
         else:
             assert (tv <= budget + page).all(), (policy, t, tv)
-        pos = np.asarray(cache.pos)
+        pos = np.asarray(cache.pos_view())
         for b in range(B):
             live = pos[b][pos[b] >= 0]
             assert len(live) == len(set(live.tolist())), "duplicate positions"
@@ -59,15 +73,15 @@ def test_cache_invariants_under_any_decode_trace(page, budget_pages, steps,
         cur = np.asarray(cache.cur_page)
         for b in range(B):
             assert tpp[b, cur[b]] <= page
+        ref = np.asarray(cache.ref_count)
+        bt = np.asarray(cache.block_table)
+        mapped = bt[bt >= 0]
+        assert len(mapped) == len(set(mapped.tolist())), "double-mapped page"
+        assert int((ref > 0).sum()) + int((ref == 0).sum()) == cache.pool_pages
+        assert int((ref > 0).sum()) == len(mapped), "free-list conservation"
 
 
-@given(
-    shape=st.sampled_from([(1, 5, 1, 4), (2, 9, 2, 8), (3, 4, 4, 16)]),
-    seed=st.integers(0, 2**16),
-    scale=st.floats(0.1, 10.0),
-)
-@settings(**_SETTINGS)
-def test_importance_scale_invariances(shape, seed, scale):
+def check_importance_scale_invariances(shape, seed, scale):
     """||V||/||K|| is homogeneous: scaling V by a scales score by a; scaling
     K by a scales it by 1/a; keydiff is scale-invariant in both args."""
     key = jax.random.PRNGKey(seed)
@@ -86,14 +100,7 @@ def test_importance_scale_invariances(shape, seed, scale):
     np.testing.assert_allclose(kd, kd2, rtol=1e-4, atol=1e-5)
 
 
-@given(
-    S=st.sampled_from([16, 24, 32]),
-    budget=st.sampled_from([8, 16]),
-    policy=st.sampled_from(["paged_eviction", "inverse_key_l2", "keydiff"]),
-    seed=st.integers(0, 2**16),
-)
-@settings(**_SETTINGS)
-def test_prefill_keeps_exactly_topk_by_score(S, budget, policy, seed):
+def check_prefill_keeps_exactly_topk_by_score(S, budget, policy, seed):
     """Alg.2: the retained set == top-budget tokens by the policy's score."""
     from repro.core.prefill import compress_and_page
     pol = get_policy(policy)
@@ -104,7 +111,7 @@ def test_prefill_keeps_exactly_topk_by_score(S, budget, policy, seed):
     v = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 2, 8))
     positions = jnp.arange(S, dtype=jnp.int32)[None]
     cache = compress_and_page(k, v, positions, jnp.ones((1, S), bool), pol, cfg)
-    live = np.asarray(cache.pos[0]).ravel()
+    live = np.asarray(cache.pos_view()[0]).ravel()
     live = set(live[live >= 0].tolist())
     scores = np.asarray(pol.prefill_scores(k, v, positions))[0]
     expected = set(np.argsort(-scores, kind="stable")[:budget].tolist())
@@ -113,36 +120,32 @@ def test_prefill_keeps_exactly_topk_by_score(S, budget, policy, seed):
         assert live == expected
 
 
-@given(
-    B=st.integers(1, 3),
-    T=st.integers(1, 20),
-    seed=st.integers(0, 2**16),
-)
-@settings(**_SETTINGS)
-def test_paged_attention_permutation_invariance(B, T, seed):
-    """Attention over the paged cache must not depend on WHICH physical page
-    holds which tokens (block-table indirection is semantics-free)."""
-    from repro.kernels.ref import paged_attention_ref
+def check_paged_attention_permutation_invariance(B, T, seed):
+    """Attention over the pooled cache must not depend on WHICH physical
+    page holds which tokens (block-table indirection is semantics-free)."""
+    from repro.kernels.ref import paged_attention_block_table_ref
     key = jax.random.PRNGKey(seed)
     KV, G, hd, P, page = 2, 2, 16, 4, 8
-    ks = jax.random.split(key, 4)
+    N = B * P + 2
+    ks = jax.random.split(key, 5)
     q = jax.random.normal(ks[0], (B, KV, G, hd))
-    kp = jax.random.normal(ks[1], (B, KV, P, page, hd))
-    vp = jax.random.normal(ks[2], (B, KV, P, page, hd))
-    pos = jnp.broadcast_to(
-        jnp.arange(P * page, dtype=jnp.int32).reshape(P, page), (B, P, page))
-    pos = jnp.where(pos < T, pos, -1)
+    kp = jax.random.normal(ks[1], (KV, N, page, hd))
+    vp = jax.random.normal(ks[2], (KV, N, page, hd))
+    pos = jax.random.randint(ks[3], (N, page), -1, T + 1)
+    bt = jax.random.permutation(ks[4], N)[:B * P].reshape(B, P).astype(jnp.int32)
     cur = jnp.full((B,), T, jnp.int32)
-    base = paged_attention_ref(q, kp, vp, pos, cur)
-    perm = jax.random.permutation(ks[3], P)
-    out = paged_attention_ref(q, kp[:, :, perm], vp[:, :, perm],
-                              pos[:, perm], cur)
+    base = paged_attention_block_table_ref(q, kp, vp, pos, bt, cur)
+    # re-home every mapped page to a different physical slot
+    perm = jnp.roll(jnp.arange(N), 1)
+    kp2 = kp[:, jnp.argsort(perm)]
+    vp2 = vp[:, jnp.argsort(perm)]
+    pos2 = pos[jnp.argsort(perm)]
+    bt2 = jnp.where(bt >= 0, perm[jnp.maximum(bt, 0)], -1)
+    out = paged_attention_block_table_ref(q, kp2, vp2, pos2, bt2, cur)
     np.testing.assert_allclose(np.asarray(base), np.asarray(out), atol=1e-5)
 
 
-@given(seed=st.integers(0, 2**16), steps=st.integers(5, 30))
-@settings(**_SETTINGS)
-def test_paged_eviction_page_uniformity(seed, steps):
+def check_paged_eviction_page_uniformity(seed, steps):
     """The paper's structural claim as a property: under PagedEviction every
     non-working page is always exactly full or exactly empty."""
     pol = get_policy("paged_eviction")
@@ -162,3 +165,97 @@ def test_paged_eviction_page_uniformity(seed, steps):
         for p_i, n in enumerate(tpp):
             if p_i != cur:
                 assert n in (0, cfg.page_size)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (skipped when the package is unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(page=st.sampled_from([2, 4, 8]), budget_pages=st.integers(2, 4),
+           steps=st.integers(1, 40), policy=st.sampled_from(_POLICIES),
+           seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_cache_invariants_under_any_decode_trace(page, budget_pages,
+                                                     steps, policy, seed):
+        check_cache_invariants_under_any_decode_trace(page, budget_pages,
+                                                      steps, policy, seed)
+
+    @given(shape=st.sampled_from([(1, 5, 1, 4), (2, 9, 2, 8), (3, 4, 4, 16)]),
+           seed=st.integers(0, 2**16), scale=st.floats(0.1, 10.0))
+    @settings(**_SETTINGS)
+    def test_importance_scale_invariances(shape, seed, scale):
+        check_importance_scale_invariances(shape, seed, scale)
+
+    @given(S=st.sampled_from([16, 24, 32]), budget=st.sampled_from([8, 16]),
+           policy=st.sampled_from(["paged_eviction", "inverse_key_l2",
+                                   "keydiff"]),
+           seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_prefill_keeps_exactly_topk_by_score(S, budget, policy, seed):
+        check_prefill_keeps_exactly_topk_by_score(S, budget, policy, seed)
+
+    @given(B=st.integers(1, 3), T=st.integers(1, 20),
+           seed=st.integers(0, 2**16))
+    @settings(**_SETTINGS)
+    def test_paged_attention_permutation_invariance(B, T, seed):
+        check_paged_attention_permutation_invariance(B, T, seed)
+
+    @given(seed=st.integers(0, 2**16), steps=st.integers(5, 30))
+    @settings(**_SETTINGS)
+    def test_paged_eviction_page_uniformity(seed, steps):
+        check_paged_eviction_page_uniformity(seed, steps)
+else:
+    def test_hypothesis_available():
+        """Records the skip visibly; the seeded fallbacks below still run."""
+        pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# seeded jax.random fallback (always runs; deterministic draws)
+# ---------------------------------------------------------------------------
+
+def _draws(seed, n, *ranges):
+    """n deterministic tuples, each element uniform over its (lo, hi]."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        vals = []
+        for j, (lo, hi) in enumerate(ranges):
+            k = jax.random.fold_in(key, i * len(ranges) + j)
+            vals.append(int(jax.random.randint(k, (), lo, hi)))
+        out.append(tuple(vals))
+    return out
+
+
+@pytest.mark.parametrize("policy", _POLICIES)
+@pytest.mark.parametrize("draw", range(3))
+def test_fallback_cache_invariants(policy, draw):
+    page, budget_pages, steps, seed = _draws(
+        draw * 31 + 7, 1, (1, 4), (2, 5), (1, 41), (0, 2**16))[0]
+    check_cache_invariants_under_any_decode_trace(2 ** page, budget_pages,
+                                                  steps, policy, seed)
+
+
+@pytest.mark.parametrize("shape", [(1, 5, 1, 4), (2, 9, 2, 8), (3, 4, 4, 16)])
+def test_fallback_importance_scale_invariances(shape):
+    for i, seed in enumerate(_draws(11, 3, (0, 2**16))):
+        check_importance_scale_invariances(shape, seed[0], 0.1 + 1.7 * i)
+
+
+@pytest.mark.parametrize("policy", ["paged_eviction", "inverse_key_l2",
+                                    "keydiff"])
+def test_fallback_prefill_topk(policy):
+    for (S, budget_i, seed) in _draws(13, 3, (16, 33), (0, 2), (0, 2**16)):
+        check_prefill_keeps_exactly_topk_by_score(S - S % 8, [8, 16][budget_i],
+                                                  policy, seed)
+
+
+def test_fallback_permutation_invariance():
+    for (B, T, seed) in _draws(17, 5, (1, 4), (1, 21), (0, 2**16)):
+        check_paged_attention_permutation_invariance(B, T, seed)
+
+
+def test_fallback_page_uniformity():
+    for (seed, steps) in _draws(19, 4, (0, 2**16), (5, 31)):
+        check_paged_eviction_page_uniformity(seed, steps)

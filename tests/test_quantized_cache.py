@@ -11,6 +11,8 @@ from repro.kernels import ops
 from repro.models import decode_step, forward_prefill, init_model, make_inputs
 from repro.models.attention import paged_attention_ref
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 
 def test_quantize_roundtrip_error_bounded():
     for seed in range(3):

@@ -21,6 +21,8 @@ from repro.core import decode_append, get_policy, init_layer_cache
 from repro.models import init_model
 from repro.serving import Engine
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 
 def _trace_outcomes(policy, steps=64, budget=16, page=4):
     pol = get_policy(policy)

@@ -24,6 +24,8 @@ from repro.training import (
     save_checkpoint,
 )
 
+pytestmark = pytest.mark.slow  # heavy tier: full suite only
+
 
 def test_adamw_single_param_matches_reference():
     """Hand-check one AdamW step against the textbook update."""
