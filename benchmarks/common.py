@@ -55,13 +55,20 @@ def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
     for _ in range(num_requests):
         n = int(rng.integers(prompt_len // 2, prompt_len))
         eng.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32))
-    # warm the decode path so compile time stays out of the measurement
+    # warm BOTH unified-step shapes (T == chunk while prompts prefill,
+    # T == 1 decode-only) so compile time stays out of the measurement
+    eng.step()
+    while eng.scheduler.prefilling():
+        eng.step()
     eng.step()
     eng.stats.decode_s = 0.0
     eng.stats.tokens_generated = 0
+    eng.stats.decode_tokens = 0
+    eng.stats.steps = 0
+    eng.stats.decode_steps = 0
     eng.run()
     s = eng.stats
-    tpot = (s.decode_s / max(s.steps, 1)) * 1000.0
+    tpot = (s.decode_s / max(s.decode_steps, 1)) * 1000.0
     return ServeResult(policy=policy, budget=budget, page=page,
                        throughput_tok_s=s.decode_tok_per_s, tpot_ms=tpot,
                        total_tokens=s.tokens_generated,

@@ -3,20 +3,98 @@ budget — PagedEviction vs Full Cache (paper: 10-12% TPOT reduction) vs
 StreamingLLM (paper: comparable).
 
 The paper's Llama 1B/3B/8B ladder is reproduced as a d_model ladder of
-reduced models (layer-count reductions collapse the ladder on CPU)."""
+reduced models (layer-count reductions collapse the ladder on CPU).
+
+Also: TTFT / inter-token-latency under MIXED prefill+decode load, chunked
+vs monolithic prefill (monolithic == whole prompt as one chunk). Chunked
+prefill interleaves decode tokens with a long prompt's chunks, so the
+decode slots' ITL tail shrinks while the long prompt's TTFT pays a small
+per-chunk overhead — results recorded in BENCH_prefill.json."""
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import statistics
+import time
 from dataclasses import replace
 
 import jax
+import numpy as np
 
-from benchmarks.common import run_serving_bench
-from repro.configs import PAPER_ARCHS
+from benchmarks.common import reduced_model, run_serving_bench
+from repro.configs import PAPER_ARCHS, CacheConfig
 from repro.models import init_model
+from repro.serving import Engine, SamplingParams
 
 SIZES = {"1b": ("llama-3.2-1b", 128), "3b": ("llama-3.2-3b", 192),
          "8b": ("llama-3.1-8b", 256)}
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_prefill.json"
+
+
+def run_mixed_latency(chunk_size: int, *, prompt_len: int = 64,
+                      short_len: int = 8, new_tokens: int = 24,
+                      max_batch: int = 4, budget: int = 32, page: int = 8,
+                      seed: int = 0) -> dict:
+    """Mixed load: (max_batch - 1) short decoders + 1 long prompt arriving
+    after they are running. Returns TTFT of the long request, decoder ITL
+    (mean + p max) during its prefill, and decode stall — all in ms."""
+    cfg, params = reduced_model("qwen2.5-3b")
+    ccfg = CacheConfig(page_size=page, cache_budget=budget,
+                       policy="paged_eviction", dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=max_batch,
+                 max_prompt_len=prompt_len, max_new_tokens=new_tokens,
+                 sampling=SamplingParams(greedy=True), seed=seed,
+                 chunk_size=chunk_size)
+    rng = np.random.default_rng(seed)
+    short = [eng.submit(rng.integers(0, cfg.vocab_size, size=short_len)
+                        .astype(np.int32)) for _ in range(max_batch - 1)]
+    # warm both program shapes + bring the short requests to RUNNING
+    for _ in range(4):
+        eng.step()
+    long_req = eng.submit(
+        rng.integers(0, cfg.vocab_size, size=prompt_len).astype(np.int32))
+    step_times = []
+    while not long_req.num_generated:
+        t0 = time.perf_counter()
+        eng.step()
+        step_times.append(time.perf_counter() - t0)
+    itl = [dt for r in short for dt in r.decode_times[-len(step_times):]]
+    eng.run()
+    return {
+        "chunk_size": chunk_size,
+        "long_ttft_ms": long_req.ttft * 1e3,
+        "prefill_steps": len(step_times),
+        # decoder ITL during the long prefill: chunked bounds every step at
+        # ~chunk tokens of work, monolithic makes decoders wait out one
+        # whole-prompt step (the ITL-max spike the unified loop removes)
+        "decoder_itl_mean_ms": statistics.mean(itl) * 1e3 if itl else None,
+        "decoder_itl_max_ms": max(itl) * 1e3 if itl else None,
+        "decode_tokens_during_prefill":
+            sum(min(len(r.decode_times), len(step_times)) for r in short),
+    }
+
+
+def run_prefill_modes(prompt_len: int = 64) -> dict:
+    """Chunked (16-token chunks) vs monolithic (whole-prompt chunk) under
+    the same mixed load; writes BENCH_prefill.json."""
+    out = {
+        "setup": {"arch": "qwen2.5-3b (reduced)", "prompt_len": prompt_len,
+                  "short_decoders": 3, "policy": "paged_eviction",
+                  "budget": 32, "page": 8},
+        "chunked": run_mixed_latency(16, prompt_len=prompt_len),
+        "monolithic": run_mixed_latency(prompt_len, prompt_len=prompt_len),
+    }
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+    for mode in ("chunked", "monolithic"):
+        r = out[mode]
+        print(f"  {mode:>10}: ttft={r['long_ttft_ms']:.1f}ms "
+              f"itl_max={r['decoder_itl_max_ms']:.1f}ms "
+              f"decode_during_prefill={r['decode_tokens_during_prefill']}")
+    return out
 
 
 def run(budget: int = 64, page: int = 8, quick: bool = False):
@@ -39,7 +117,12 @@ def run(budget: int = 64, page: int = 8, quick: bool = False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--skip-mixed", action="store_true",
+                    help="skip the chunked-vs-monolithic TTFT/ITL bench")
+    args = ap.parse_args()
+    run(quick=args.quick)
+    if not args.skip_mixed:
+        run_prefill_modes()
 
 
 if __name__ == "__main__":

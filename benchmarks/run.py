@@ -39,6 +39,14 @@ def main() -> None:
     for tag, pol, r in latency.run(quick=quick):
         print(f"tpot_{tag}_{pol},{r.tpot_ms * 1000:.0f},{r.tpot_ms:.2f} ms")
 
+    _section("TTFT/ITL under mixed load: chunked vs monolithic prefill")
+    for mode, r in latency.run_prefill_modes().items():
+        if mode == "setup":
+            continue
+        print(f"ttft_{mode},{r['long_ttft_ms'] * 1000:.0f},"
+              f"{r['long_ttft_ms']:.1f} ms ttft / "
+              f"{r['decoder_itl_max_ms']:.1f} ms itl_max")
+
     _section("eviction bookkeeping overhead (paper Limitation 4)")
     for pol, us in eviction_overhead.run(quick=quick):
         print(f"evict_overhead_{pol},{us:.0f},us/step")

@@ -2,12 +2,16 @@
 from repro.core.paged_cache import (
     PagedLayerCache,
     alloc_pages,
+    append_chunk,
+    chunk_rollover,
     init_layer_cache,
-    insert_request,
+    release_rows,
     write_token,
     write_prompt_pages,
     evict_page,
+    evict_pages_mask,
     evict_token,
+    evict_token_mask,
     find_free_slot,
     reclaim_empty_pages,
     start_new_page,
@@ -29,8 +33,9 @@ from repro.core.decode import decode_append
 from repro.core import importance
 
 __all__ = [
-    "PagedLayerCache", "alloc_pages", "init_layer_cache", "insert_request",
-    "write_token", "write_prompt_pages", "evict_page", "evict_token",
+    "PagedLayerCache", "alloc_pages", "append_chunk", "chunk_rollover",
+    "init_layer_cache", "release_rows", "write_token", "write_prompt_pages",
+    "evict_page", "evict_pages_mask", "evict_token", "evict_token_mask",
     "find_free_slot", "reclaim_empty_pages", "start_new_page",
     "to_contiguous", "POLICIES", "EvictionOutcome", "EvictionPolicy",
     "FullCache", "InverseKeyL2", "KeyDiff", "PagedEviction", "StreamingLLM",

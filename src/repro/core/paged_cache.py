@@ -435,67 +435,147 @@ def evict_token(cache: PagedLayerCache, flat_idx, enable=None) -> PagedLayerCach
 
 
 # ---------------------------------------------------------------------------
-# request insertion (continuous batching: splice a prefilled B=1 cache in)
+# chunked append (prefill writes straight into the shared pool)
+# ---------------------------------------------------------------------------
+# The old continuous-batching path prefilled a request into a private B=1
+# pool and spliced it into the batch (``insert_request``). That splice — and
+# its per-slot-specialized compiled program — is gone: requests now prefill
+# in place, chunk by chunk, through the same block tables decode uses.
+
+def release_rows(cache: PagedLayerCache, enable) -> PagedLayerCache:
+    """Free EVERY page the selected batch rows map (request retired — its
+    slot is being handed to a new request) and reset their write heads.
+    ``enable``: (B,) bool. Runs inside the unified step for rows that start
+    prefilling this step, so the leaving request's pages return to the
+    SHARED free list before the newcomer's first chunk allocates."""
+    B, P = cache.block_table.shape
+    N = cache.pool_pages
+    dead = cache.mapped_mask() & enable[:, None]          # (B, P)
+    tgt = jnp.where(dead, cache._phys(), N).reshape(-1)
+    return cache._replace(
+        pos=cache.pos.at[tgt].set(-1),
+        score=cache.score.at[tgt].set(-jnp.inf),
+        ref_count=cache.ref_count.at[tgt].add(-1),
+        block_table=jnp.where(dead, -1, cache.block_table),
+        cur_page=jnp.where(enable, 0, cache.cur_page),
+        # park the head "full" on the unmapped slot: the first append's lazy
+        # rollover then allocates the row's first page from the free list
+        cur_off=jnp.where(enable, cache.page_size, cache.cur_off),
+    )
+
+
+def rollover_to_free_page(cache: PagedLayerCache, need):
+    """Where ``need``, move the write head onto a fresh physical page:
+    reclaim fully-emptied mapped pages, pick the first unmapped logical
+    slot, pop a free pool page, map it. If a row has no unmapped slot or
+    the pool is dry, force-evict that row's fewest-token (but > 0) page —
+    never the current write page — which releases both a slot and a
+    physical page, so the next write ALWAYS lands. Returns
+    (cache, must_force (B,) bool). Shared by decode post_write rollover
+    (`policies._rollover_to_free_page`, which reports the telemetry) and
+    the chunked-append path."""
+    c = reclaim_empty_pages(cache, include_current=need)
+    slot, slot_ok = find_free_slot(c)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    phys_ok = rank < c.num_free()
+    must_force = need & (~slot_ok | ~phys_ok)
+    tpp = c.tokens_per_page().astype(jnp.float32)         # (B, P)
+    B, P = tpp.shape
+    cur_onehot = jax.nn.one_hot(c.cur_page, P, dtype=bool)
+    cand = jnp.where((tpp > 0) & ~cur_onehot, tpp, jnp.inf)
+    victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+    c = evict_page(c, victim, enable=must_force)
+    slot2, _ = find_free_slot(c)
+    slot = jnp.where(must_force, slot2, slot)
+    c, phys, ok = alloc_pages(c, need)
+    return start_new_page(c, slot, phys, enable=need & ok), must_force
+
+
+def _chunk_roll_noop(args):
+    return args[0]
+
+
+def _chunk_roll_body(args):
+    cache, need = args
+    return rollover_to_free_page(cache, need)[0]
+
+
+def chunk_rollover(cache: PagedLayerCache, need) -> PagedLayerCache:
+    """Where ``need``, move the write head onto a fresh physical page from
+    the SHARED free list (reclaiming fully-emptied mapped pages first).
+    Chunked prefill sizes block tables with ``ceil(chunk/page)`` slots of
+    headroom (``transformer.init_decode_caches``), so structured policies
+    never run dry mid-chunk; unstructured token policies CAN (their top-C
+    survivors scatter one-per-page), in which case the fewest-token page is
+    force-evicted so the incoming tokens always land."""
+    return lax.cond(jnp.any(need), _chunk_roll_body, _chunk_roll_noop,
+                    (cache, need))
+
+
+def append_chunk(cache: PagedLayerCache, k_chunk, v_chunk, pos_chunk,
+                 score_chunk, n_tok) -> PagedLayerCache:
+    """Append up to T tokens per request at the write head, allocating fresh
+    pages from the shared free list as pages fill.
+
+    k_chunk, v_chunk : (B, T, KV, hd)
+    pos_chunk        : (B, T) int32, -1 for padding past ``n_tok``
+    score_chunk      : (B, T) f32 policy write scores
+    n_tok            : (B,) int32 — row b appends tokens [0, n_tok[b])
+
+    NO eviction happens mid-chunk: the policy compresses at the chunk
+    boundary (``EvictionPolicy.chunk_prefill_evict`` — the incremental form
+    of the paper's Alg. 2), so a row transiently holds up to
+    budget + chunk tokens. A decode row is just the T == 1 (or n_tok == 1)
+    case of the same op — the unified step program has no separate insert
+    or prefill write path."""
+    B, T = pos_chunk.shape
+
+    def body(c, xs):
+        k_t, v_t, p_t, s_t, t = xs
+        act = t < n_tok
+        c = chunk_rollover(c, act & (c.cur_off >= c.page_size))
+        return write_token(c, k_t, v_t, p_t, s_t, active=act), None
+
+    xs = (jnp.swapaxes(k_chunk, 0, 1), jnp.swapaxes(v_chunk, 0, 1),
+          pos_chunk.T, score_chunk.T, jnp.arange(T))
+    cache, _ = lax.scan(body, cache, xs)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# masked bulk eviction (chunk-boundary compression)
 # ---------------------------------------------------------------------------
 
-def insert_request(dst: PagedLayerCache, src: PagedLayerCache, slot: int
-                   ) -> PagedLayerCache:
-    """Splice single-request ``src`` (batch 1, its own pool) into batch row
-    ``slot`` of ``dst``: free the pages the leaving request held, allocate
-    fresh pages from the shared free list, copy src's mapped pages across,
-    and write the new block-table row. O(P) pages copied, no slab-shaped
-    transfer. Requires matching page_size/num_pages and a pool with >= P
-    free pages after the old row is released (guaranteed at the default
-    N_pool == B * P sizing)."""
-    B, P = dst.block_table.shape
-    assert src.block_table.shape == (1, P), (src.block_table.shape, P)
-    assert src.page_size == dst.page_size
-    N = dst.pool_pages
-    # undersized (overcommitted) pools could leave < P free pages after the
-    # old row is released, and the dest selection below would then silently
-    # overwrite other requests' live pages — refuse at trace time
-    assert N >= B * P, (
-        f"insert_request needs a full-size pool (>= {B}*{P} pages, got {N}); "
-        "overcommitted pools need free-count-aware admission")
+def evict_token_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
+    """Invalidate every token selected by a LOGICAL (B, P, page) bool mask.
+    Physical pages stay mapped; fully-emptied pages return to the pool via
+    :func:`reclaim_empty_pages` (the chunk hook calls it after this)."""
+    B, P, page = mask.shape
+    N = cache.pool_pages
+    phys = jnp.broadcast_to(cache._phys()[..., None], (B, P, page))
+    en = mask & cache.mapped_mask()[..., None]
+    tgt = jnp.where(en, phys, N).reshape(-1)
+    off = jnp.broadcast_to(jnp.arange(page, dtype=jnp.int32), (B, P, page)
+                           ).reshape(-1)
+    return cache._replace(
+        pos=cache.pos.at[tgt, off].set(-1),
+        score=cache.score.at[tgt, off].set(-jnp.inf),
+    )
 
-    # 1. release the leaving request's pages
-    old_row = dst.block_table[slot]                   # (P,)
-    old_tgt = jnp.where(old_row >= 0, jnp.maximum(old_row, 0), N)
-    ref = dst.ref_count.at[old_tgt].add(-1)
-    pos = dst.pos.at[old_tgt].set(-1)
-    score = dst.score.at[old_tgt].set(-jnp.inf)
 
-    # 2. claim the P lowest-index free pages as destinations
-    csum = jnp.cumsum((ref == 0).astype(jnp.int32))
-    dest = jnp.searchsorted(csum, jnp.arange(1, P + 1),
-                            side="left").astype(jnp.int32)   # (P,) distinct
-    src_row = src.block_table[0]                      # (P,)
-    src_mapped = src_row >= 0
-    src_phys = jnp.maximum(src_row, 0)
-    dest_tgt = jnp.where(src_mapped, dest, N)         # copy mapped slots only
-
-    def copy(dst_arr, src_arr):
-        return dst_arr.at[dest_tgt].set(
-            jnp.take(src_arr, src_phys, axis=0).astype(dst_arr.dtype))
-
-    k = copy(dst.k, src.k)
-    v = copy(dst.v, src.v)
-    pos = copy(pos, src.pos)
-    score = copy(score, src.score)
-    ref = ref.at[dest_tgt].add(1)
-    k_scale = v_scale = None
-    if dst.quantized:
-        k_scale = copy(dst.k_scale, src.k_scale)
-        v_scale = copy(dst.v_scale, src.v_scale)
-
-    new_row = jnp.where(src_mapped, dest, -1)
-    return dst._replace(
-        k=k, v=v, pos=pos, score=score,
-        k_scale=k_scale, v_scale=v_scale,
-        block_table=dst.block_table.at[slot].set(new_row),
-        ref_count=ref,
-        cur_page=dst.cur_page.at[slot].set(src.cur_page[0]),
-        cur_off=dst.cur_off.at[slot].set(src.cur_off[0]),
+def evict_pages_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
+    """Evict every LOGICAL page selected by a (B, P) bool mask: invalidate
+    its tokens, return the physical page to the shared free list, unmap the
+    slot. The multi-victim form of :func:`evict_page` — chunk boundaries can
+    owe up to ceil(chunk/page) evictions at once."""
+    N = cache.pool_pages
+    en = mask & cache.mapped_mask()                       # (B, P)
+    tgt = jnp.where(en, cache._phys(), N).reshape(-1)
+    return cache._replace(
+        pos=cache.pos.at[tgt].set(-1),
+        score=cache.score.at[tgt].set(-jnp.inf),
+        ref_count=cache.ref_count.at[tgt].add(-1),
+        block_table=jnp.where(en, -1, cache.block_table),
     )
 
 

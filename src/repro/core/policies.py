@@ -3,9 +3,20 @@
 Every policy is a stateless, hashable strategy object with three hooks:
 
   write_score(k_tok, v_tok, pos)        score stored with each written token
-  prefill_keep(k, v, positions, valid)  paper Alg.2 — token-level prompt
-                                        compression to the budget, *before*
-                                        paging (indices in position order)
+  prefill_keep(k, v, positions, valid)  paper Alg.2, one-shot form — token-
+                                        level prompt compression to the
+                                        budget *before* paging (offline /
+                                        whole-prompt flows)
+  chunk_prefill_evict(cache, cfg, ...)  paper Alg.2, incremental form — at
+                                        each chunked-prefill boundary,
+                                        compress the pooled cache back to
+                                        budget (PagedEviction: evict whole
+                                        COMPLETED pages; token policies:
+                                        keep the top-C tokens). Evicting the
+                                        minimum-score completed page whenever
+                                        the count exceeds budget_pages is a
+                                        running top-K, so the surviving page
+                                        set is chunk-size invariant.
   post_write(cache, cfg, active)        paper Alg.3 — decode-time bookkeeping
                                         after each appended token: page
                                         rollover, eviction, block-table update
@@ -35,9 +46,12 @@ from repro.core.paged_cache import (
     PagedLayerCache,
     alloc_pages,
     evict_page,
+    evict_pages_mask,
     evict_token,
+    evict_token_mask,
     find_free_slot,
     reclaim_empty_pages,
+    rollover_to_free_page,
     start_new_page,
 )
 
@@ -79,26 +93,20 @@ def _rollover_noop(args):
     return cache, jnp.zeros((cache.batch,), bool)
 
 
+def _out_of_window(cache: PagedLayerCache, window: int, active):
+    """(B, P, page) bool — live tokens a windowed layer can never attend
+    again (pos <= newest - window). Dropping them at a chunk boundary is
+    exactly equivalence-preserving: any later query's window mask excludes
+    them too, so no attention result changes."""
+    pos = cache.pos_view()
+    valid = pos >= 0
+    cur = jnp.max(jnp.where(valid, pos, -1), axis=(1, 2), keepdims=True)
+    return valid & (pos <= cur - window) & active[:, None, None]
+
+
 def _rollover_body(args):
     cache, need = args
-    c = reclaim_empty_pages(cache, include_current=need)
-    slot, slot_ok = find_free_slot(c)
-    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
-    phys_ok = rank < c.num_free()
-    must_force = need & (~slot_ok | ~phys_ok)
-    # force-evict the page with fewest (but >0) valid tokens, never the
-    # current write page
-    tpp = c.tokens_per_page().astype(jnp.float32)     # (B, P)
-    B, P = tpp.shape
-    cur_onehot = jax.nn.one_hot(c.cur_page, P, dtype=bool)
-    cand = jnp.where((tpp > 0) & ~cur_onehot, tpp, jnp.inf)
-    victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
-    c = evict_page(c, victim, enable=must_force)
-    slot2, _ = find_free_slot(c)
-    slot = jnp.where(must_force, slot2, slot)
-    c, phys, ok = alloc_pages(c, need)
-    c = start_new_page(c, slot, phys, enable=need & ok)
-    return c, must_force
+    return rollover_to_free_page(cache, need)
 
 
 class EvictionPolicy:
@@ -135,6 +143,44 @@ class EvictionPolicy:
         idx = jnp.sort(idx, axis=-1)                       # restore order
         return idx, scores
 
+    # --- Alg.2, incremental: chunk-boundary compression ----------------------
+    def _evict_scores(self, cache: PagedLayerCache, cfg: CacheConfig):
+        """(B, P, page) dynamic importance used by chunk/token eviction;
+        defaults to the stored write scores."""
+        return cache.score_view()
+
+    def chunk_prefill_evict(self, cache: PagedLayerCache, cfg: CacheConfig,
+                            active=None, window: int = 0) -> PagedLayerCache:
+        """Compress the pooled cache back to the budget at a chunked-prefill
+        boundary (incremental Alg.2). ``active``: (B,) bool — rows that
+        consumed a prompt chunk this step; ``window``: the layer's attention
+        window (out-of-window tokens are dropped first — they can never be
+        attended again). The whole body runs under ``lax.cond`` so pure-
+        decode steps skip it."""
+        if active is None:
+            active = jnp.ones((cache.batch,), bool)
+        return jax.lax.cond(
+            jnp.any(active),
+            lambda c: self._chunk_evict_body(c, cfg, active, window),
+            lambda c: c, cache)
+
+    def _chunk_evict_body(self, cache, cfg: CacheConfig, active, window: int):
+        """Token-level default: keep the top-C live tokens by eviction score
+        (rank via stable argsort — ties keep the older token), then return
+        fully-emptied pages to the shared free list."""
+        B, P, page = cache.batch, cache.num_pages, cache.page_size
+        if window:
+            cache = evict_token_mask(cache, _out_of_window(cache, window,
+                                                           active))
+        valid = cache.valid_mask()
+        scores = jnp.where(valid, self._evict_scores(cache, cfg), -jnp.inf)
+        order = jnp.argsort(-scores.reshape(B, -1), axis=-1)
+        ranks = jnp.argsort(order, axis=-1)                 # 0 == best
+        evict = valid.reshape(B, -1) & (ranks >= cfg.cache_budget) & \
+            active[:, None]
+        cache = evict_token_mask(cache, evict.reshape(B, P, page))
+        return reclaim_empty_pages(cache)
+
     # --- Alg.3: decode bookkeeping -------------------------------------------
     def post_write(self, cache: PagedLayerCache, cfg: CacheConfig,
                    active=None) -> EvictionOutcome:
@@ -163,7 +209,7 @@ class FullCache(EvictionPolicy):
         return self._round_slab(cfg, -(-seq_len // cfg.page_size))
 
     def write_score(self, k_tok, v_tok, pos_tok):
-        return jnp.zeros(k_tok.shape[0], jnp.float32)
+        return jnp.zeros(k_tok.shape[:-2], jnp.float32)
 
     def prefill_scores(self, k, v, positions):
         # recency: irrelevant when nothing is dropped; for windowed layers
@@ -175,6 +221,14 @@ class FullCache(EvictionPolicy):
         idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         return idx, jnp.where(valid, self.prefill_scores(k, v, positions),
                               -jnp.inf)
+
+    def _chunk_evict_body(self, cache, cfg, active, window: int):
+        # no budget: only windowed layers shed (never-again-attendable) tokens
+        if window:
+            cache = evict_token_mask(cache, _out_of_window(cache, window,
+                                                           active))
+            cache = reclaim_empty_pages(cache)
+        return cache
 
     def post_write(self, cache, cfg, active=None):
         if active is None:
@@ -216,6 +270,28 @@ class PagedEviction(EvictionPolicy):
 
     def prefill_scores(self, k, v, positions):
         return importance.vk_ratio_score(k, v)
+
+    def _chunk_evict_body(self, cache, cfg, active, window: int):
+        """Structured chunk-boundary compression: evict the lowest-mean-score
+        COMPLETED pages until at most ``budget_pages`` remain (the partial
+        working page rides free, mirroring Alg.3's budget+page slack).
+        Because candidacy is by completion and the minimum is always evicted
+        first, the surviving page set equals the overall top-K — chunk-size
+        invariant whenever attention inputs are (see DESIGN.md §6)."""
+        if window:
+            cache = evict_token_mask(cache, _out_of_window(cache, window,
+                                                           active))
+        full = cache.tokens_per_page() >= cache.page_size   # (B, P) completed
+        if cfg.protect_recent:
+            B, P = full.shape
+            full &= ~jax.nn.one_hot(cache.cur_page, P, dtype=bool)
+        m = jnp.maximum(jnp.sum(full, axis=-1) - cfg.budget_pages, 0)  # (B,)
+        cand = jnp.where(full, cache.page_scores(), jnp.inf)
+        order = jnp.argsort(cand, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)                 # 0 == worst
+        evict = full & (ranks < m[:, None]) & active[:, None]
+        cache = evict_pages_mask(cache, evict)
+        return reclaim_empty_pages(cache)
 
     def post_write(self, cache, cfg, active=None):
         if active is None:
@@ -269,6 +345,12 @@ class StreamingLLM(EvictionPolicy):
         _, idx = jax.lax.top_k(scores, keep)
         return jnp.sort(idx, axis=-1), scores
 
+    def _evict_scores(self, cache, cfg):
+        # sinks pinned with +inf so budget compression never drops them;
+        # everything else ranked by the stored recency score
+        return jnp.where(cache.pos_view() < cfg.num_sink_tokens,
+                         jnp.inf, cache.score_view())
+
     def post_write(self, cache, cfg, active=None):
         if active is None:
             active = jnp.ones((cache.batch,), bool)
@@ -301,17 +383,13 @@ class _UnstructuredTokenPolicy(EvictionPolicy):
         # the working set needs headroom beyond budget/page_size.
         return self._round_slab(cfg, min(total, 2 * cfg.budget_pages + 2))
 
-    def _evict_scores(self, cache):
-        """(B, P, page) dynamic importance; override if not stored score."""
-        return cache.score_view()
-
     def post_write(self, cache, cfg, active=None):
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         over = active & (cache.total_valid() > cfg.cache_budget)
         valid = cache.valid_mask()
         B, P, page = valid.shape
-        scores = jnp.where(valid, self._evict_scores(cache), jnp.inf)
+        scores = jnp.where(valid, self._evict_scores(cache, cfg), jnp.inf)
         victim = jnp.argmin(scores.reshape(B, P * page), axis=-1).astype(jnp.int32)
         cache = evict_token(cache, victim, enable=over)
         need = active & (cache.cur_off >= cache.page_size)
@@ -335,13 +413,13 @@ class KeyDiff(_UnstructuredTokenPolicy):
     def write_score(self, k_tok, v_tok, pos_tok):
         # keydiff importance is global (needs the mean key) -> computed at
         # eviction time from the live cache; stored score is unused.
-        return jnp.zeros(k_tok.shape[0], jnp.float32)
+        return jnp.zeros(k_tok.shape[:-2], jnp.float32)
 
     def prefill_scores(self, k, v, positions):
         mean = jnp.mean(k.astype(jnp.float32), axis=1, keepdims=True)
         return importance.keydiff_score(k, mean)
 
-    def _evict_scores(self, cache):
+    def _evict_scores(self, cache, cfg):
         valid = cache.valid_mask()                          # (B,P,page)
         kf = cache.k_view().astype(jnp.float32)
         w = valid[..., None, None].astype(jnp.float32)

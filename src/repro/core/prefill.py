@@ -1,9 +1,14 @@
-"""Paper Algorithm 2 — prefill-phase token compression.
+"""Paper Algorithm 2 — prefill-phase token compression (one-shot form).
 
 After the prompt forward pass produces contiguous K/V for a layer, the
 policy selects which tokens survive (budget C), *then* the survivors are
 divided into pages (evicting first avoids any cross-page data movement —
 paper §4.2). The output is a ready-to-decode :class:`PagedLayerCache`.
+
+This is the offline / whole-prompt API (``forward_prefill``). The SERVING
+path compresses incrementally instead: chunks append straight into the
+shared pool and ``EvictionPolicy.chunk_prefill_evict`` prunes at each
+chunk boundary (DESIGN.md §6).
 """
 from __future__ import annotations
 

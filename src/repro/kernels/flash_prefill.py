@@ -1,12 +1,29 @@
-"""Pallas TPU causal flash-attention kernel (prefill hot path).
+"""Pallas TPU flash-attention kernels for the prefill hot paths.
 
-Standard online-softmax flash with GQA support and optional sliding
-window. Grid: (batch, q_head, q_block, kv_block) with kv minor-most —
-(m, l, acc) scratch accumulates across kv blocks. Causally-skippable kv
-blocks are skipped with ``pl.when`` (block never contributes compute);
-with a sliding window, out-of-window blocks are likewise skipped — this is
-the triangle-skipping the blocked pure-jnp path cannot express (it masks
+Two kernels:
+
+``flash_attention_kernel`` — contiguous causal flash (train / offline
+whole-prompt prefill). Standard online-softmax flash with GQA support and
+optional sliding window. Grid: (batch, q_head, q_block, kv_block) with kv
+minor-most — (m, l, acc) scratch accumulates across kv blocks. Causally-
+skippable kv blocks are skipped with ``pl.when`` (block never contributes
+compute); with a sliding window, out-of-window blocks are likewise skipped
+— the triangle-skipping the blocked pure-jnp path cannot express (it masks
 but still multiplies; see EXPERIMENTS.md §Perf).
+
+``paged_flash_prefill_kernel`` — CHUNKED prefill against the shared page
+pool (the unified-step hot path, DESIGN.md §6): Q is a contiguous
+(T, hd) chunk per request, K/V are PHYSICAL pool pages gathered via the
+scalar-prefetched block table exactly like the decode kernel
+(``paged_attention.py``) — each (b, h, p) grid step DMAs one (page, hd)
+tile, so the chunk's earlier pages (including pages written by previous
+chunks of the same prompt) stream straight out of the pool with no
+per-request gather ever materialized. Unmapped slots clamp to pool page 0
+and are masked in-kernel off the same scalar ref — a freed physical page
+may already hold ANOTHER request's live tokens. Masking is by token
+position: kv pos <= q pos (+ optional window), so intra-chunk causality
+falls out of write-then-attend; padding queries (q_pos < 0) mask
+everything and emit zeros.
 """
 from __future__ import annotations
 
@@ -16,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.paged_attention import _pool_index
 
 NEG_INF = -1e30
 
@@ -117,4 +136,125 @@ def flash_attention_kernel(q, k, v, *, window: int = 0, scale: float | None = No
         ],
         interpret=interpret,
     )(qT, kT, vT)
+    return jnp.swapaxes(out, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# paged chunked prefill (block-table indirection, scalar prefetch)
+# ---------------------------------------------------------------------------
+
+def _paged_prefill_kernel(bt_ref, q_ref, k_ref, v_ref, qpos_ref, kpos_ref,
+                          o_ref, m_scr, l_scr, acc_scr, *, num_pages: int,
+                          window: int, scale: float):
+    """One (batch, q_head, logical_page) step.
+
+    bt_ref   : (B, P) int32 block tables (scalar prefetch, SMEM)
+    q_ref    : (T, hd)     this head's query chunk
+    k_ref    : (page, hd)  one PHYSICAL page of keys (block-table indexed)
+    v_ref    : (page, hd)  one physical page of values
+    qpos_ref : (1, T)      query token positions (-1 == padding query)
+    kpos_ref : (1, page)   token positions of that physical page (-1 invalid)
+    o_ref    : (T, hd)     output (written on the last page step)
+    scratch  : m (T, 128), l (T, 128), acc (T, hd) f32
+    """
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)                  # (T, hd)
+    k = k_ref[...].astype(jnp.float32)                  # (page, hd)
+    v = v_ref[...].astype(jnp.float32)
+    qpos = qpos_ref[0, :]                               # (T,)
+    kpos = kpos_ref[0, :]                               # (page,)
+    mapped = bt_ref[b, p] >= 0
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # (T, page): pool slot live AND causally visible from this query row
+    valid = mapped & (kpos[None, :] >= 0) & (qpos[:, None] >= 0) & \
+        (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        valid &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[:, 0:1]                              # (T, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new)
+    pexp = jnp.where(valid, pexp, 0.0)
+    l_new = alpha * l_scr[:, 0:1] + jnp.sum(pexp, axis=-1, keepdims=True)
+    acc_new = alpha * acc_scr[...] + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc_new
+
+    @pl.when(p == num_pages - 1)
+    def _finalize():
+        # padding queries have l == 0 -> emit zeros, not NaN
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[:, 0:1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret"))
+def paged_flash_prefill_kernel(q, k_pool, v_pool, pos, block_table, q_pos, *,
+                               window: int = 0, scale: float | None = None,
+                               interpret: bool = True):
+    """Chunked-prefill attention over the shared page pool.
+
+    q: (B, T, H, hd) — a contiguous chunk of queries per request (RoPE'd);
+    k_pool/v_pool: (KV, N_pool, page, hd); pos: (N_pool, page) int32;
+    block_table: (B, P) int32; q_pos: (B, T) int32 (-1 == padding)
+    -> (B, T, H, hd). The chunk's own K/V must already be in the pool
+    (write-then-attend).
+
+    Grid is (B, H, P): with GQA each physical page is DMA'd once per
+    q head (G x the decode kernel's per-KV-head fetch). For chunked
+    prefill the redundant bytes amortize over T query rows of compute per
+    tile; T == 1 callers should use the decode kernel instead
+    (transformer._step_layer dispatches exactly so). Folding the G heads
+    into a (G*T, hd) query tile on a (B, KV, P) grid removes the
+    redundancy and is the natural follow-up."""
+    B, T, H, hd = q.shape
+    KV = k_pool.shape[0]
+    G = H // KV
+    page = k_pool.shape[2]
+    P = block_table.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    kernel = functools.partial(_paged_prefill_kernel, num_pages=P,
+                               window=window, scale=scale)
+
+    def kv_map(b, h, p, bt):
+        return (h // G, _pool_index(bt, b, p), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, P),
+        in_specs=[
+            pl.BlockSpec((None, None, T, hd), lambda b, h, p, bt: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, page, hd), kv_map),
+            pl.BlockSpec((None, None, page, hd), kv_map),
+            pl.BlockSpec((1, T), lambda b, h, p, bt: (b, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, h, p, bt: (_pool_index(bt, b, p), 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, T, hd),
+                               lambda b, h, p, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, 128), jnp.float32),
+            pltpu.VMEM((T, 128), jnp.float32),
+            pltpu.VMEM((T, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, jnp.swapaxes(q, 1, 2), k_pool, v_pool, q_pos, pos)
     return jnp.swapaxes(out, 1, 2)

@@ -18,7 +18,10 @@ import jax.numpy as jnp
 
 from repro.core.paged_cache import PagedLayerCache
 from repro.kernels.block_score import block_score_kernel
-from repro.kernels.flash_prefill import flash_attention_kernel
+from repro.kernels.flash_prefill import (
+    flash_attention_kernel,
+    paged_flash_prefill_kernel,
+)
 from repro.kernels.paged_attention import paged_attention_kernel
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
@@ -57,6 +60,26 @@ def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
         cache.pos, cache.block_table, cur_pos,
         window=window, scale=scale, interpret=INTERPRET)
     return out.reshape(B, H, hd)
+
+
+def paged_prefill_attention(q, cache: PagedLayerCache, *, q_pos,
+                            window: int = 0, scale: float | None = None):
+    """Chunked-prefill attention over a pooled paged cache via the Pallas
+    paged flash-prefill kernel (the unified-step hot path).
+
+    q: (B, T, H, hd) chunk queries; q_pos: (B, T) int32 (-1 == padding)
+    -> (B, T, H, hd). The chunk's K/V must already be appended to the pool
+    (write-then-attend). int8 caches dequantize pool-side before the call
+    (the chunk kernel is f32-tile only; an int8-native variant is the same
+    follow-up the decode kernel already landed)."""
+    if cache.quantized:
+        k_pool, v_pool = cache.k_dequant(), cache.v_dequant()
+    else:
+        k_pool, v_pool = cache.k, cache.v
+    return paged_flash_prefill_kernel(
+        q, _pool_layout(k_pool), _pool_layout(v_pool),
+        cache.pos, cache.block_table, q_pos,
+        window=window, scale=scale, interpret=INTERPRET)
 
 
 def page_scores(cache: PagedLayerCache):

@@ -55,6 +55,46 @@ def paged_attention_block_table_ref(q, k_pool, v_pool, pos, block_table,
                                scale=scale)
 
 
+def paged_prefill_attention_ref(q, k_pages, v_pages, pos, q_pos, *,
+                                window: int = 0, scale: float | None = None):
+    """Dense chunked-prefill attention oracle: a contiguous chunk of queries
+    per request attends over that request's paged K/V (which already
+    contains the chunk's own tokens — write-then-attend, so intra-chunk
+    causality falls out of the position mask).
+
+    q: (B, T, KV, G, hd); k_pages/v_pages: (B, KV, P, page, hd);
+    pos: (B, P, page); q_pos: (B, T) int32 (-1 == padding query)
+    -> (B, T, KV, G, hd). Padding queries return zeros.
+    """
+    B, T, KV, G, hd = q.shape
+    P, page = k_pages.shape[2], k_pages.shape[3]
+    scale = scale if scale is not None else hd ** -0.5
+    kf = k_pages.reshape(B, KV, P * page, hd).astype(jnp.float32)
+    vf = v_pages.reshape(B, KV, P * page, hd).astype(jnp.float32)
+    pf = pos.reshape(B, P * page)
+    s = jnp.einsum("btkgd,bksd->bkgts", q.astype(jnp.float32), kf) * scale
+    mask = (pf[:, None, :] >= 0) & (pf[:, None, :] <= q_pos[:, :, None]) & \
+        (q_pos[:, :, None] >= 0)                            # (B, T, S)
+    if window > 0:
+        mask &= pf[:, None, :] > (q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgts,bksd->btkgd", p, vf)
+    return o.astype(q.dtype)
+
+
+def paged_prefill_attention_block_table_ref(q, k_pool, v_pool, pos,
+                                            block_table, q_pos, *,
+                                            window: int = 0,
+                                            scale: float | None = None):
+    """Same signature/layout as flash_prefill.paged_flash_prefill_kernel:
+    gather the pool through the block table, then run the dense oracle."""
+    kg, vg, pg = gather_block_table(k_pool, v_pool, pos, block_table)
+    return paged_prefill_attention_ref(q, kg, vg, pg, q_pos, window=window,
+                                       scale=scale)
+
+
 def block_score_ref(k_pages, v_pages, pos):
     """k_pages, v_pages: (..., page, KV, hd); pos: (..., page) -> (...,).
     Works on the physical pool layout (N, page, KV, hd) -> (N,) as well as

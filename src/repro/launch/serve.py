@@ -27,6 +27,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=96)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=64,
+                    help="prefill chunk size (tokens/step/request)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max tokens per unified step (default "
+                         "max_batch + chunk)")
     ap.add_argument("--greedy", action="store_true", default=True)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -44,7 +49,8 @@ def main() -> None:
     eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=args.max_batch,
                  max_prompt_len=args.prompt_len,
                  max_new_tokens=args.new_tokens,
-                 sampling=SamplingParams(greedy=args.greedy))
+                 sampling=SamplingParams(greedy=args.greedy),
+                 chunk_size=args.chunk, token_budget=args.token_budget)
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -58,7 +64,11 @@ def main() -> None:
     print(f"finished {len(done)} requests, {s.tokens_generated} tokens "
           f"in {dt:.1f}s ({s.tokens_generated/dt:.1f} tok/s incl. compile)")
     print(f"decode-only throughput: {s.decode_tok_per_s:.1f} tok/s; "
-          f"steps={s.steps}")
+          f"steps={s.steps}; programs={eng.num_compiled_programs()}")
+    ttfts = [r.ttft for r in done if r.ttft > 0]
+    if ttfts:
+        print(f"ttft: mean={1e3 * np.mean(ttfts):.1f}ms "
+              f"max={1e3 * np.max(ttfts):.1f}ms (chunk={args.chunk})")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,7 @@ from repro.models.transformer import (
     decode_step,
     embed_tokens,
     forward_prefill,
+    forward_step,
     forward_train,
     init_decode_caches,
     init_model,
@@ -14,6 +15,6 @@ from repro.models.multimodal import input_specs, make_inputs
 
 __all__ = [
     "LayerCaches", "ModelCache", "decode_step", "embed_tokens",
-    "forward_prefill", "forward_train", "init_decode_caches", "init_model",
-    "lm_logits", "input_specs", "make_inputs",
+    "forward_prefill", "forward_step", "forward_train", "init_decode_caches",
+    "init_model", "lm_logits", "input_specs", "make_inputs",
 ]

@@ -184,6 +184,32 @@ def paged_attention_ref(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_attention_chunk_ref(q, cache: PagedLayerCache, *, q_pos,
+                              window: int = 0, scale: float | None = None):
+    """Chunked-prefill GQA attention over a paged cache (the unified-step
+    CPU path). q: (B, T, H, hd) — a contiguous chunk of queries, RoPE'd at
+    q_pos; q_pos: (B, T) int32, -1 marks padding queries (rows shorter
+    than the chunk), which return zeros. The chunk's own K/V must already
+    be appended to the pool (write-then-attend), so intra-chunk causality
+    is just pos <= q_pos. Returns (B, T, H, hd).
+
+    Gathers the pool into the request view and delegates to the single
+    chunk-attention oracle in ``kernels/ref.py`` — one copy of the
+    masking/causality logic, shared with the Pallas kernel's parity tests.
+    """
+    from repro.kernels.ref import paged_prefill_attention_ref
+
+    B, T, H, hd = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    kg = jnp.moveaxis(cache.k_view(), 3, 1)        # (B, KV, P, page, hd)
+    vg = jnp.moveaxis(cache.v_view(), 3, 1)
+    out = paged_prefill_attention_ref(q.reshape(B, T, KV, G, hd), kg, vg,
+                                      cache.pos_view(), q_pos,
+                                      window=window, scale=scale)
+    return out.reshape(B, T, H, hd)
+
+
 def decode_project_qkv(params, cfg: ModelConfig, x, cur_pos):
     """x: (B, D) single token -> q (B,H,hd), k, v (B,KV,hd), RoPE at cur_pos."""
     B, D = x.shape

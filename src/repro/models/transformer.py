@@ -1,11 +1,19 @@
 """Generic decoder stack assembled from a ModelConfig's layer pattern.
 
-Three execution modes:
+Four execution modes:
   forward_train   contiguous causal forward, logits over the whole sequence
   forward_prefill contiguous forward that *builds the paged KV caches*
-                  (paper Alg.2 compression applied per layer before paging)
-  decode_step     one token per request against paged caches / recurrent
-                  states (paper Alg.3 eviction runs inside each attn layer)
+                  (paper Alg.2 one-shot compression per layer before paging
+                  — offline / whole-prompt flows)
+  forward_step    UNIFIED mixed-batch step (the serving hot path, DESIGN.md
+                  §6): up to T tokens per request — decode rows append 1,
+                  prefilling rows append a prompt chunk — written straight
+                  into the shared page pool (``append_chunk``), attended
+                  write-then-attend through block tables, with Alg.3
+                  eviction on decode rows and incremental Alg.2 compression
+                  (``chunk_prefill_evict``) at each prefill chunk boundary
+  decode_step     one token for every request (the T == 1 specialization,
+                  kept as the standalone single-token API)
 
 Deep stacks are lowered as ``lax.scan`` over repetitions of the layer
 pattern with stacked parameters: HLO size is O(pattern period), not
@@ -21,7 +29,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import CacheConfig, LayerSpec, ModelConfig
-from repro.core.paged_cache import PagedLayerCache, write_token
+from repro.core.paged_cache import (
+    PagedLayerCache,
+    append_chunk,
+    chunk_rollover,
+    release_rows,
+    write_token,
+)
 from repro.core.policies import EvictionPolicy
 from repro.core.prefill import compress_and_page
 from repro.models import attention as attn_mod
@@ -252,17 +266,30 @@ class ModelCache(NamedTuple):
 
 def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
                         seq_len: int, policy: EvictionPolicy,
-                        ccfg: CacheConfig):
-    """Slab sizing for one layer (window-aware; see DESIGN.md §3)."""
+                        ccfg: CacheConfig, chunk_tokens: int = 0):
+    """Slab sizing for one layer (window-aware; see DESIGN.md §3).
+
+    ``chunk_tokens``: chunked-prefill headroom — a row transiently holds up
+    to budget + chunk tokens between chunk boundaries (``append_chunk``
+    never evicts mid-chunk), so the block table gets ``ceil(chunk/page)``
+    extra logical slots. The pool stays ``N = B * P``, so admission still
+    cannot over-commit HBM (DESIGN.md §6)."""
     window = _spec_window(cfg, spec)
     hint = seq_len if not window else min(seq_len, window + ccfg.page_size)
-    return policy.slab_pages(ccfg, hint)
+    pages = policy.slab_pages(ccfg, hint)
+    if chunk_tokens:
+        total = -(-seq_len // ccfg.page_size)
+        extra = -(-chunk_tokens // ccfg.page_size)
+        pages = policy._round_slab(ccfg, min(pages + extra, max(total, pages)))
+    return pages
 
 
 def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
                        policy: EvictionPolicy, ccfg: CacheConfig,
-                       cond=None, dtype=None):
-    """Empty caches for decode-from-scratch (or dry-run ShapeDtype specs)."""
+                       cond=None, dtype=None, chunk_tokens: int = 0):
+    """Empty caches for decode-from-scratch (or dry-run ShapeDtype specs).
+    ``chunk_tokens``: size block tables for chunked prefill (see
+    :func:`_layer_cache_shapes`)."""
     from repro.core.paged_cache import init_layer_cache
     dt = dtype or dtype_of(ccfg.dtype)
     pat = cfg.layer_pattern()
@@ -271,7 +298,8 @@ def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
 
     def one(spec) -> LayerCaches:
         if spec.mixer == "attn":
-            pages = _layer_cache_shapes(cfg, spec, batch, seq_len, policy, ccfg)
+            pages = _layer_cache_shapes(cfg, spec, batch, seq_len, policy,
+                                        ccfg, chunk_tokens=chunk_tokens)
             kv = init_layer_cache(batch, pages, ccfg.page_size,
                                   cfg.num_kv_heads, hd, dt)
             xa = None
@@ -294,47 +322,185 @@ def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 # ---------------------------------------------------------------------------
-# request insertion (continuous batching)
+# unified mixed-batch step (chunked prefill + decode in ONE program)
 # ---------------------------------------------------------------------------
+# This replaces the old prefill->insert splice (forward a whole padded
+# prompt into a private B=1 pool, then copy it into the batch through a
+# per-slot-specialized jitted insert): requests now prefill IN PLACE, chunk
+# by chunk, through the same block tables decode uses, so a long prompt
+# never stalls the decode slots sharing its batch.
 
-def _splice_layer_caches(batch_lc: LayerCaches, single_lc: LayerCaches,
-                         slot: int, stacked: bool) -> LayerCaches:
-    """Splice one prefilled (batch-1) layer cache into the batch cache.
+def _scan_recurrent(step_fn, state, init_state, h_seq, n_tok, reset_mask):
+    """Run a per-token decode step over a (B, T, D) chunk. Rows past their
+    ``n_tok`` freeze their state and emit zeros; ``reset_mask`` rows start
+    from ``init_state`` (slot handed to a new request — note xLSTM inits
+    are NOT all-zero: the max-stabilizer m starts at -inf). Chunked prefill
+    of a recurrent mixer is sequential by nature — O(T) small steps; the
+    attention layers are the hot path."""
+    B, T = h_seq.shape[:2]
+    fresh = lambda init, a: jnp.where(
+        jnp.reshape(reset_mask, (B,) + (1,) * (a.ndim - 1)),
+        init.astype(a.dtype), a)
+    state = jax.tree.map(fresh, init_state, state)
 
-    Paged KV caches splice through the page pool (free old row, allocate
-    fresh pages, copy, rewrite the block-table row — paged_cache.
-    insert_request); recurrent states / static cross-KV are plain
-    batch-row writes. ``stacked``: leaves carry a leading (R,) repetition
-    dim (pattern slots) — the pool splice is vmapped over it."""
-    from repro.core.paged_cache import insert_request
+    def body(st, xs):
+        h_t, t = xs
+        out, st2 = step_fn(h_t, st)
+        act = t < n_tok
+        keep = lambda a, b: jnp.where(
+            jnp.reshape(act, (B,) + (1,) * (a.ndim - 1)), a, b)
+        return jax.tree.map(keep, st2, st), jnp.where(act[:, None], out, 0.0)
 
-    kv = batch_lc.kv
-    if kv is not None:
-        ins = lambda b_kv, s_kv: insert_request(b_kv, s_kv, slot)
-        kv = jax.vmap(ins)(kv, single_lc.kv) if stacked \
-            else ins(kv, single_lc.kv)
-
-    def splice(b, s):
-        if stacked:
-            return b.at[:, slot].set(s[:, 0].astype(b.dtype))
-        return b.at[slot].set(s[0].astype(b.dtype))
-
-    rest = {}
-    for f in ("xattn", "mamba", "mlstm", "slstm"):
-        bf, sf = getattr(batch_lc, f), getattr(single_lc, f)
-        rest[f] = jax.tree.map(splice, bf, sf) if bf is not None else None
-    return LayerCaches(kv=kv, **rest)
+    state, outs = lax.scan(body, state,
+                           (jnp.swapaxes(h_seq, 0, 1), jnp.arange(T)))
+    return jnp.swapaxes(outs, 0, 1), state
 
 
-def insert_request_cache(batch_cache: "ModelCache", single_cache: "ModelCache",
-                         slot: int) -> "ModelCache":
-    """Splice a prefilled single-request ModelCache into batch row ``slot``."""
-    pattern = [_splice_layer_caches(bl, sl, slot, stacked=True)
-               for bl, sl in zip(batch_cache.pattern, single_cache.pattern)]
-    tail = [_splice_layer_caches(bl, sl, slot, stacked=False)
-            for bl, sl in zip(batch_cache.tail, single_cache.tail)]
-    cur_pos = batch_cache.cur_pos.at[slot].set(single_cache.cur_pos[0])
-    return ModelCache(pattern=pattern, tail=tail, cur_pos=cur_pos)
+def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
+                policy: EvictionPolicy, ccfg: CacheConfig, decode_mask,
+                prefill_mask, reset_mask, use_pallas: bool = False):
+    """One layer of the unified step. x: (B, T, D); positions: (B, T) int32
+    with -1 past each row's ``n_tok``. Returns (x, LayerCaches)."""
+    B, T, _ = x.shape
+    h = apply_norm(lp["norm1"], x)
+    if spec.mixer == "attn":
+        q, k, v = attn_mod.project_qkv(lp["attn"], cfg, h,
+                                       jnp.maximum(positions, 0))
+        kvc: PagedLayerCache = cache.kv
+        # rows starting a new request free the previous occupant's pages
+        # back to the shared pool before their first chunk allocates
+        kvc = release_rows(kvc, reset_mask)
+        score = policy.write_score(k, v, positions)         # (B, T)
+        kvc = append_chunk(kvc, k, v, positions, score, n_tok)
+        window = _spec_window(cfg, spec)
+        if use_pallas and T == 1:
+            # decode-only instantiation: the single-token decode kernel
+            # fetches each KV page once per KV head (not per q head) and
+            # streams int8 natively — don't pay the chunk kernel's tile
+            # shape for one query row
+            from repro.kernels.ops import paged_attention
+            o = paged_attention(q[:, 0], kvc, cur_pos=positions[:, 0],
+                                window=window)[:, None]
+        elif use_pallas:
+            from repro.kernels.ops import paged_prefill_attention
+            o = paged_prefill_attention(q, kvc, q_pos=positions, window=window)
+        else:
+            o = attn_mod.paged_attention_chunk_ref(q, kvc, q_pos=positions,
+                                                   window=window)
+        # Alg.3 bookkeeping for decode rows, incremental Alg.2 compression
+        # for rows that consumed a prompt chunk — disjoint masks, both
+        # skipped via lax.cond when their mask is all-False
+        kvc = policy.post_write(kvc, ccfg, active=decode_mask).cache
+        kvc = policy.chunk_prefill_evict(kvc, ccfg, active=prefill_mask,
+                                         window=window)
+        x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"]
+        if cache.xattn is not None:
+            hx = apply_norm(lp["norm_x"], x)
+            x = x + attn_mod.cross_attention_forward(lp["xattn"], cfg, hx,
+                                                     cache.xattn)
+        cache = cache._replace(kv=kvc)
+    elif spec.mixer == "mamba":
+        m, st = _scan_recurrent(
+            lambda h_t, st: mamba_mod.mamba_decode_step(lp["mamba"], cfg,
+                                                        h_t, st),
+            cache.mamba,
+            mamba_mod.mamba_init_state(cfg, B, cache.mamba.conv.dtype),
+            h, n_tok, reset_mask)
+        x = x + m
+        cache = cache._replace(mamba=st)
+    elif spec.mixer == "mlstm":
+        m, st = _scan_recurrent(
+            lambda h_t, st: xlstm_mod.mlstm_decode_step(lp["mlstm"], cfg,
+                                                        h_t, st),
+            cache.mlstm,
+            xlstm_mod.mlstm_init_state(cfg, B, cache.mlstm.conv.dtype),
+            h, n_tok, reset_mask)
+        x = x + m
+        cache = cache._replace(mlstm=st)
+    elif spec.mixer == "slstm":
+        m, st = _scan_recurrent(
+            lambda h_t, st: xlstm_mod.slstm_decode_step(lp["slstm"], cfg,
+                                                        h_t, st),
+            cache.slstm, xlstm_mod.slstm_init_state(cfg, B),
+            h, n_tok, reset_mask)
+        x = x + m
+        cache = cache._replace(slstm=st)
+    if spec.mlp == "dense":
+        h2 = apply_norm(lp["norm2"], x)
+        x = x + mlp_forward(lp["mlp"], cfg, h2)
+    elif spec.mlp == "moe":
+        # per-token dense-combine MoE: padding tokens cannot steal expert
+        # capacity from live ones, so results are chunking-invariant
+        h2 = apply_norm(lp["norm2"], x)
+        mo = moe_forward_decode(lp["moe"], cfg, h2.reshape(B * T, -1))
+        x = x + mo.reshape(B, T, -1)
+    return x, cache
+
+
+def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
+                 policy: EvictionPolicy, ccfg: CacheConfig, decode_mask=None,
+                 prefill_mask=None, reset_mask=None, ac: Callable = Identity,
+                 use_pallas: bool = False):
+    """Unified mixed-batch step: up to T tokens per request in ONE program.
+
+    tokens      : (B, T) int32 — row b's live tokens are tokens[b, :n_tok[b]]
+                  (decode rows carry 1, prefilling rows a prompt chunk,
+                  idle rows 0), appended at positions cur_pos[b] + t
+    n_tok       : (B,) int32
+    decode_mask : (B,) bool — rows decoding (Alg.3 post_write runs)
+    prefill_mask: (B,) bool — rows that consumed a prompt chunk
+                  (chunk-boundary compression runs; defaults to
+                  ``n_tok > 0 & ~decode_mask``)
+    reset_mask  : (B,) bool — rows starting a NEW request this step (the
+                  previous occupant's pages are freed, recurrent state and
+                  cur_pos reset)
+
+    Returns (logits (B, vocab) at each row's last live token, cache).
+    Rows with n_tok == 0 return logits of stale garbage — callers mask.
+    """
+    x = embed_tokens(params, cfg, tokens)                   # (B, T, D)
+    B, T = x.shape[0], x.shape[1]
+    if decode_mask is None:
+        decode_mask = jnp.zeros((B,), bool)
+    if prefill_mask is None:
+        prefill_mask = (n_tok > 0) & ~decode_mask
+    if reset_mask is None:
+        reset_mask = jnp.zeros((B,), bool)
+    cur_pos = jnp.where(reset_mask, 0, cache.cur_pos)
+    positions = cur_pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    positions = jnp.where(jnp.arange(T)[None, :] < n_tok[:, None],
+                          positions, -1)
+    pat = cfg.layer_pattern()
+    P = cfg.pattern_period
+
+    def rep_body(x, xs):
+        slot_params, slot_caches = xs
+        new_caches = []
+        for p in range(P):
+            x, c = _step_layer(slot_params[p], cfg, pat[p], ac(x),
+                               slot_caches[p], positions, n_tok, policy,
+                               ccfg, decode_mask, prefill_mask, reset_mask,
+                               use_pallas)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if params["pattern"]:
+        x, pattern_caches = lax.scan(
+            rep_body, x, (tuple(params["pattern"]), tuple(cache.pattern)))
+        pattern_caches = list(pattern_caches)
+    else:
+        pattern_caches = []
+    tail_caches = []
+    for i, lp in enumerate(params["tail"]):
+        x, c = _step_layer(lp, cfg, pat[i], ac(x), cache.tail[i], positions,
+                           n_tok, policy, ccfg, decode_mask, prefill_mask,
+                           reset_mask, use_pallas)
+        tail_caches.append(c)
+    last = jnp.maximum(n_tok - 1, 0)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = lm_logits(params, cfg, x_last)
+    return logits, ModelCache(pattern=pattern_caches, tail=tail_caches,
+                              cur_pos=cur_pos + n_tok)
 
 
 # ---------------------------------------------------------------------------
@@ -442,6 +608,11 @@ def _decode_layer(lp, cfg, spec, x, cache: LayerCaches, cur_pos,
         q, k, v = attn_mod.decode_project_qkv(lp["attn"], cfg, h, cur_pos)
         kvc: PagedLayerCache = cache.kv
         score = policy.write_score(k, v, cur_pos)
+        # lazy rollover: chunked prefill parks the head at cur_off ==
+        # page_size when a chunk ends exactly on a page boundary — the
+        # first decode write then allocates the working page (post_write
+        # keeps rolling eagerly afterwards, so this is a no-op mid-stream)
+        kvc = chunk_rollover(kvc, active & (kvc.cur_off >= kvc.page_size))
         kvc = write_token(kvc, k, v, cur_pos, score, active=active)
         window = _spec_window(cfg, spec)
         if use_pallas:

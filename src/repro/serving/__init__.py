@@ -2,7 +2,7 @@
 from repro.serving.engine import Engine, EngineStats
 from repro.serving.request import Request, RequestStatus, SamplingParams
 from repro.serving.sampler import sample_tokens
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import Scheduler, StepPlan
 
 __all__ = ["Engine", "EngineStats", "Request", "RequestStatus",
-           "SamplingParams", "sample_tokens", "Scheduler"]
+           "SamplingParams", "sample_tokens", "Scheduler", "StepPlan"]

@@ -1,29 +1,33 @@
 """Continuous-batching serving engine (the vLLM-shaped runtime).
 
-Three compiled programs:
-  prefill : batch-1 prompt (padded to ``max_prompt_len``) -> per-slot cache
-  insert  : splice a prefilled single-request cache into the batch cache —
-            with the shared page pool this frees the leaving request's
-            pages, allocates fresh ones from the free list, and rewrites
-            ONE block-table row (O(P) page copies, no slab transfer)
-  decode  : one token for every active slot (static batch) + sampling
+ONE unified step program (`models.transformer.forward_step`): each engine
+iteration the scheduler packs up to ``token_budget`` tokens — one decode
+token per RUNNING slot plus up to ``chunk_size`` prompt tokens per
+PREFILLING slot — and a single jitted program appends them all straight
+into the shared page pool, attends through block tables (paged
+flash-prefill kernel on TPU), runs Alg.3 eviction on decode rows and
+incremental Alg.2 compression at prefill chunk boundaries, and samples.
+Decode-only iterations reuse the same function at T == 1, so a full mixed
+workload compiles exactly two programs — there is no separate prefill
+forward, no per-slot-specialized insert splice, and a long prompt never
+stalls the decode slots sharing its batch (TTFT/ITL under mixed load is
+what `benchmarks/latency.py` measures).
 
 The eviction policy is a constructor argument — the paper's PagedEviction,
 any baseline, or ``full``. Because every policy statically bounds the
-per-request block table and the pool is sized for the full batch,
-admission can never over-commit HBM (DESIGN.md §2); pages a request evicts
-return to the SHARED free list and become headroom for every other request.
+per-request block table (budget + chunk headroom) and the pool is sized
+for the full batch, admission can never over-commit HBM (DESIGN.md §2,
+§6); pages a request evicts — or releases when it retires — return to the
+SHARED free list and become headroom for every other request.
 
-Telemetry per step: pages/tokens evicted, forced (fragmentation) evictions,
-wall time — the benchmarks build the paper's throughput/TPOT/overhead
-tables from these. :meth:`Engine.pool_stats` reports fleet-level pool
-occupancy (free vs mapped physical pages across layers).
+Telemetry per step: wall time split prefill/decode, tokens generated —
+the benchmarks build the paper's throughput/TPOT/overhead tables from
+these. :meth:`Engine.pool_stats` reports fleet-level pool occupancy.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +37,8 @@ from repro.configs.base import CacheConfig, ModelConfig
 from repro.core.policies import EvictionPolicy, get_policy
 from repro.models.transformer import (
     ModelCache,
-    decode_step,
-    forward_prefill,
+    forward_step,
     init_decode_caches,
-    insert_request_cache,
 )
 from repro.serving.request import Request, RequestStatus, SamplingParams
 from repro.serving.sampler import sample_tokens
@@ -45,8 +47,11 @@ from repro.serving.scheduler import Scheduler
 
 @dataclass
 class EngineStats:
-    steps: int = 0
-    tokens_generated: int = 0
+    steps: int = 0               # every unified step (mixed + decode-only)
+    decode_steps: int = 0        # decode-only steps — the ones whose wall
+                                 # time lands in decode_s
+    tokens_generated: int = 0    # every emitted token (mixed steps included)
+    decode_tokens: int = 0       # tokens from decode-only steps
     pages_evicted: int = 0
     tokens_evicted: int = 0
     forced_evictions: int = 0
@@ -55,14 +60,15 @@ class EngineStats:
 
     @property
     def decode_tok_per_s(self) -> float:
-        return self.tokens_generated / self.decode_s if self.decode_s else 0.0
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, cache_cfg: CacheConfig,
                  max_batch: int = 8, max_prompt_len: int = 256,
                  max_new_tokens: int = 128, sampling: SamplingParams | None = None,
-                 use_pallas: bool = False, seed: int = 0):
+                 use_pallas: bool = False, seed: int = 0,
+                 chunk_size: int = 64, token_budget: int | None = None):
         self.cfg = cfg
         self.params = params
         self.ccfg = cache_cfg
@@ -73,37 +79,32 @@ class Engine:
         self.total_len = max_prompt_len + max_new_tokens
         self.sampling = sampling or SamplingParams()
         self.use_pallas = use_pallas
-        self.scheduler = Scheduler(max_batch)
+        self.chunk_size = min(chunk_size, max_prompt_len)
+        self.scheduler = Scheduler(max_batch, chunk_size=self.chunk_size,
+                                   token_budget=token_budget)
         self.stats = EngineStats()
         self._key = jax.random.PRNGKey(seed)
         self._next_id = 0
 
-        # batch-wide state
+        # batch-wide state (block tables carry chunk headroom: a prefilling
+        # row transiently holds budget + chunk tokens between boundaries)
         self.cache: ModelCache = init_decode_caches(
-            cfg, max_batch, self.total_len, self.policy, self.ccfg)
+            cfg, max_batch, self.total_len, self.policy, self.ccfg,
+            chunk_tokens=self.chunk_size)
         self.cur_tokens = np.zeros((max_batch,), np.int32)
-        self.active = np.zeros((max_batch,), bool)
 
-        self._prefill_fn = jax.jit(self._prefill_impl)
-        self._insert_fn = jax.jit(self._insert_impl, static_argnames=("slot",))
-        self._decode_fn = jax.jit(self._decode_impl)
+        self._step_fn = jax.jit(self._step_impl)
 
     # ---------------------------------------------------------------- jitted
-    def _prefill_impl(self, params, tokens, valid):
-        return forward_prefill(params, self.cfg, tokens, self.policy,
-                               self.ccfg, valid=valid,
-                               total_seq_hint=self.total_len,
-                               use_pallas=self.use_pallas)
-
-    def _insert_impl(self, batch_cache, single_cache, *, slot: int):
-        # paged KV leaves splice through the shared pool's block tables;
-        # recurrent / cross-attn states are plain batch-row writes
-        return insert_request_cache(batch_cache, single_cache, slot)
-
-    def _decode_impl(self, params, tokens, cache, active, key):
-        logits, cache = decode_step(params, self.cfg, tokens, cache,
-                                    self.policy, self.ccfg, active=active,
-                                    use_pallas=self.use_pallas)
+    def _step_impl(self, params, tokens, n_tok, decode_mask, prefill_mask,
+                   reset_mask, cache, key):
+        """The unified step: append + attend + evict + sample. Compiled once
+        per token-dim T — the engine only ever calls it with T == chunk_size
+        (mixed/prefill steps) and T == 1 (decode-only steps)."""
+        logits, cache = forward_step(
+            params, self.cfg, tokens, n_tok, cache, self.policy, self.ccfg,
+            decode_mask=decode_mask, prefill_mask=prefill_mask,
+            reset_mask=reset_mask, use_pallas=self.use_pallas)
         s = self.sampling
         next_tok = sample_tokens(key, logits, temperature=s.temperature,
                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
@@ -112,8 +113,8 @@ class Engine:
     # ------------------------------------------------------------------- api
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int | None = None,
                eos_token_id: int | None = None) -> Request:
-        assert len(prompt) <= self.max_prompt_len, (
-            f"prompt len {len(prompt)} > max_prompt_len {self.max_prompt_len}")
+        assert 0 < len(prompt) <= self.max_prompt_len, (
+            f"prompt len {len(prompt)} not in (0, {self.max_prompt_len}]")
         req = Request(request_id=self._next_id,
                       prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens or self.max_new_tokens,
@@ -122,32 +123,6 @@ class Engine:
         self.scheduler.add(req)
         return req
 
-    def _admit(self) -> None:
-        for slot, req in self.scheduler.schedule():
-            t0 = time.perf_counter()
-            S = self.max_prompt_len
-            tokens = np.zeros((1, S), np.int32)
-            valid = np.zeros((1, S), bool)
-            n = len(req.prompt)
-            tokens[0, :n] = req.prompt
-            valid[0, :n] = True
-            logits, single = self._prefill_fn(self.params, jnp.asarray(tokens),
-                                              jnp.asarray(valid))
-            self.cache = self._insert_fn(self.cache, single, slot=slot)
-            s = self.sampling
-            self._key, sk = jax.random.split(self._key)
-            first = sample_tokens(sk, logits, temperature=s.temperature,
-                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
-            first_id = int(jax.device_get(first)[0])
-            req.output_tokens.append(first_id)
-            self.cur_tokens[slot] = first_id
-            self.active[slot] = True
-            req.status = RequestStatus.RUNNING
-            req.prefill_time = time.perf_counter() - t0
-            self.stats.prefill_s += req.prefill_time
-            self.stats.tokens_generated += 1
-            self._maybe_finish(req)
-
     def _maybe_finish(self, req: Request) -> None:
         last = req.output_tokens[-1] if req.output_tokens else None
         if req.eos_token_id is not None and last == req.eos_token_id:
@@ -155,30 +130,67 @@ class Engine:
         elif req.num_generated >= req.max_new_tokens:
             req.status = RequestStatus.FINISHED_LENGTH
         if req.finished:
-            self.active[req.slot] = False
             self.scheduler.retire(req)
 
     def step(self) -> bool:
-        """One engine iteration: admit + one decode step. Returns whether
-        any work remains."""
-        self._admit()
-        if not self.active.any():
+        """One engine iteration: plan a unified step (admission + decode
+        tokens + prompt chunks) and run it. Returns whether work remains."""
+        plan = self.scheduler.plan()
+        if plan.empty:
             return self.scheduler.has_work()
+        B = self.max_batch
+        T = self.chunk_size if plan.prefill else 1
+        tokens = np.zeros((B, T), np.int32)
+        n_tok = np.zeros((B,), np.int32)
+        decode_mask = np.zeros((B,), bool)
+        prefill_mask = np.zeros((B,), bool)
+        reset_mask = np.zeros((B,), bool)
+        reset_mask[plan.reset] = True
+        for slot, req in plan.decode:
+            tokens[slot, 0] = self.cur_tokens[slot]
+            n_tok[slot] = 1
+            decode_mask[slot] = True
+        for slot, req, chunk, _ in plan.prefill:
+            tokens[slot, :len(chunk)] = chunk
+            n_tok[slot] = len(chunk)
+            prefill_mask[slot] = True
+            req.prefill_pos += len(chunk)
+
         t0 = time.perf_counter()
         self._key, sk = jax.random.split(self._key)
-        next_tok, self.cache = self._decode_fn(
-            self.params, jnp.asarray(self.cur_tokens), self.cache,
-            jnp.asarray(self.active), sk)
+        next_tok, self.cache = self._step_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(n_tok),
+            jnp.asarray(decode_mask), jnp.asarray(prefill_mask),
+            jnp.asarray(reset_mask), self.cache, sk)
         next_np = np.asarray(jax.device_get(next_tok))
         dt = time.perf_counter() - t0
-        self.stats.decode_s += dt
+        now = time.perf_counter()
         self.stats.steps += 1
-        for slot, req in self.scheduler.active():
+        if plan.prefill:
+            self.stats.prefill_s += dt
+        else:
+            self.stats.decode_s += dt
+            self.stats.decode_steps += 1
+
+        for slot, req in plan.decode:
             req.output_tokens.append(int(next_np[slot]))
             req.decode_times.append(dt)
             self.cur_tokens[slot] = next_np[slot]
             self.stats.tokens_generated += 1
+            if not plan.prefill:
+                self.stats.decode_tokens += 1
             self._maybe_finish(req)
+        for slot, req, chunk, completes in plan.prefill:
+            req.prefill_time += dt
+            if completes:
+                # the sampled token at the prompt's last position is this
+                # request's FIRST output token (its TTFT moment)
+                req.output_tokens.append(int(next_np[slot]))
+                req.first_token_time = now
+                self.cur_tokens[slot] = next_np[slot]
+                req.status = RequestStatus.RUNNING
+                self.stats.tokens_generated += 1
+                self._maybe_finish(req)
         return self.scheduler.has_work()
 
     def run(self, max_steps: int = 100_000) -> list[Request]:
@@ -186,6 +198,12 @@ class Engine:
         while self.step() and steps < max_steps:
             steps += 1
         return self.scheduler.finished
+
+    def num_compiled_programs(self) -> int:
+        """Distinct compiled executables behind the engine (the per-slot
+        recompilation family is dead: expect 2 — T == chunk and T == 1)."""
+        size = getattr(self._step_fn, "_cache_size", None)
+        return int(size()) if callable(size) else -1
 
     def pool_stats(self) -> dict:
         """Fleet-level page-pool occupancy, aggregated over attention layers:

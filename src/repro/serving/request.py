@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import enum
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -34,12 +35,27 @@ class Request:
     status: RequestStatus = RequestStatus.WAITING
     output_tokens: list[int] = field(default_factory=list)
     slot: int = -1                          # engine batch slot while active
-    prefill_time: float = 0.0
+    prefill_pos: int = 0                    # prompt tokens already consumed
+                                            # by chunked prefill
+    arrival_time: float = field(default_factory=time.perf_counter)
+    first_token_time: float = 0.0           # perf_counter at first emission
+    prefill_time: float = 0.0               # wall time spent in prefill steps
     decode_times: list[float] = field(default_factory=list)
 
     @property
     def num_generated(self) -> int:
         return len(self.output_tokens)
+
+    @property
+    def prompt_remaining(self) -> int:
+        return len(self.prompt) - self.prefill_pos
+
+    @property
+    def ttft(self) -> float:
+        """Time-to-first-token (s); 0.0 until the first token is emitted."""
+        if not self.first_token_time:
+            return 0.0
+        return self.first_token_time - self.arrival_time
 
     @property
     def finished(self) -> bool:

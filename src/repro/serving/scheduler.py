@@ -1,22 +1,67 @@
-"""FIFO continuous-batching scheduler.
+"""Chunk-aware continuous-batching scheduler (vLLM-style token budget).
 
-Keeps a waiting queue and a fixed number of batch slots (the jitted decode
-step has a static batch). A waiting request is admitted whenever a slot
-frees up; its prompt is prefilled into that slot's paged cache. This is
-the vLLM scheduling shape minus preemption (the eviction policies bound
-per-request cache statically, so admission can never over-commit memory —
-a property vLLM has to enforce dynamically; see DESIGN.md §2).
+Keeps a waiting queue and a fixed number of batch slots (the jitted unified
+step has a static batch). Each engine iteration the scheduler emits ONE
+:class:`StepPlan` mixing decode tokens and prompt chunks:
+
+- **Admission**: a waiting request is admitted (FIFO) whenever a slot frees
+  up. Because every policy statically bounds the per-request block table
+  (budget + chunk headroom) and the pool is sized ``B * P``, admission can
+  never over-commit HBM — no memory-pressure feedback loop, no preemption
+  (DESIGN.md §2, §6).
+- **Decode priority**: every RUNNING slot gets exactly 1 token first —
+  decode latency (ITL) is never sacrificed to prefill throughput.
+- **Prompt chunks**: the remaining ``token_budget`` is handed to PREFILLING
+  slots in slot order, up to ``chunk_size`` tokens each, tracked via
+  ``Request.prefill_pos``. A long prompt therefore spreads over many steps
+  while decode rows keep emitting — the old engine's whole-prompt prefill
+  stall is gone.
+
+``token_budget`` floors at ``max_batch + 1`` so a prefilling request always
+makes progress even with every other slot decoding.
 """
 from __future__ import annotations
 
 from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.serving.request import Request, RequestStatus
 
 
+@dataclass
+class StepPlan:
+    """One unified step's worth of work.
+
+    decode : (slot, request) rows feeding back their last sampled token
+    prefill: (slot, request, chunk, completes) rows consuming ``chunk``
+             prompt tokens; ``completes`` marks the prompt's final chunk
+             (the step's sampled token is that request's FIRST output)
+    reset  : slots whose row state must be wiped first (newly admitted —
+             the previous occupant's pages return to the shared pool)
+    """
+    decode: list[tuple[int, Request]] = field(default_factory=list)
+    prefill: list[tuple[int, Request, np.ndarray, bool]] = \
+        field(default_factory=list)
+    reset: list[int] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return not self.decode and not self.prefill
+
+    @property
+    def num_tokens(self) -> int:
+        return len(self.decode) + sum(len(c) for _, _, c, _ in self.prefill)
+
+
 class Scheduler:
-    def __init__(self, max_batch: int):
+    def __init__(self, max_batch: int, chunk_size: int = 64,
+                 token_budget: int | None = None):
         self.max_batch = max_batch
+        self.chunk_size = chunk_size
+        self.token_budget = max(token_budget or (max_batch + chunk_size),
+                                max_batch + 1)
         self.waiting: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * max_batch
         self.finished: list[Request] = []
@@ -31,21 +76,42 @@ class Scheduler:
 
     def schedule(self) -> list[tuple[int, Request]]:
         """Admit waiting requests into free slots (FIFO). Returns the newly
-        admitted (slot, request) pairs — the engine prefills these."""
+        admitted (slot, request) pairs — their first chunk is scheduled by
+        the same step's :meth:`plan`."""
         admitted = []
         for slot in self.free_slots():
             if not self.waiting:
                 break
             req = self.waiting.popleft()
             req.slot = slot
+            req.prefill_pos = 0
             req.status = RequestStatus.PREFILLING
             self.slots[slot] = req
             admitted.append((slot, req))
         return admitted
 
+    def plan(self) -> StepPlan:
+        """Admit, then pack one unified step under the token budget."""
+        plan = StepPlan(reset=[slot for slot, _ in self.schedule()])
+        plan.decode = self.active()
+        budget = self.token_budget - len(plan.decode)
+        for slot, req in self.prefilling():
+            if budget <= 0:
+                break
+            n = min(self.chunk_size, req.prompt_remaining, budget)
+            chunk = req.prompt[req.prefill_pos:req.prefill_pos + n]
+            completes = req.prefill_pos + n >= len(req.prompt)
+            plan.prefill.append((slot, req, chunk, completes))
+            budget -= n
+        return plan
+
     def active(self) -> list[tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slots)
                 if r is not None and r.status == RequestStatus.RUNNING]
+
+    def prefilling(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.status == RequestStatus.PREFILLING]
 
     def retire(self, req: Request) -> None:
         assert req.finished

@@ -239,6 +239,40 @@ def cache_shardings(mesh: Mesh, cfg, cache_shape, batch: int) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# unified-step / chunk-kernel operands
+# ---------------------------------------------------------------------------
+
+def step_input_shardings(mesh: Mesh, cfg, batch: int, chunk: int) -> dict:
+    """PartitionSpecs for the unified mixed-batch step's operands and the
+    paged flash-prefill kernel's tile layouts (DESIGN.md §6):
+
+      tokens / n_tok / masks     (B, T) / (B,)   — batch over DP axes
+      q chunk  (B, T, H, hd)                     — heads over "model" when
+                                                   divisible (same split as
+                                                   the decode kernel's query
+                                                   group), batch over DP
+      q_pos    (B, T)                            — batch over DP
+      block_table (B, P)                         — batch only (scalar
+                                                   prefetch reads it whole)
+
+    The pool-side operands (k/v pool, pos) keep the cache rules — the chunk
+    kernel streams the same physical tiles the decode kernel does, so no
+    resharding happens between mixed and decode-only steps."""
+    b = batch_axes(mesh, batch)
+    msz = _ma_size(mesh)
+    MA = model_axes(mesh)
+    heads = MA if (msz > 1 and cfg.num_heads % msz == 0) else None
+    return {
+        "tokens": P(b, None),
+        "n_tok": P(b),
+        "mask": P(b),
+        "q": P(b, None, heads, None),
+        "q_pos": P(b, None),
+        "block_table": P(b, None),
+    }
+
+
+# ---------------------------------------------------------------------------
 # batch / misc
 # ---------------------------------------------------------------------------
 

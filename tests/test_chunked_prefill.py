@@ -1,0 +1,356 @@
+"""Chunked paged prefill + unified mixed-batch step (DESIGN.md §6).
+
+Covers the acceptance surface of the chunked-prefill refactor:
+
+- chunked-vs-monolithic equivalence: same surviving tokens and cache
+  contents for ``full`` and ``paged_eviction`` across chunk sizes
+  {64, 256, prompt_len} (monolithic == the whole prompt as one chunk).
+  The regime is budget >= prompt - min_chunk so compression fires only at
+  the FINAL boundary — there the incremental top-K page process provably
+  equals the one-shot result; with mid-prefill eviction later chunks
+  legitimately attend a pruned prefix (the paper's vLLM integration) and
+  only the invariants/budget bound are asserted.
+- paged flash-prefill Pallas kernel vs pure-jnp reference parity
+  (atol 1e-4), on caches whose pages were freed and REALLOCATED to other
+  requests mid-trace.
+- forward_step(T == 1) == decode_step — the unified program really is a
+  superset of the decode program.
+- engine level: decode tokens are emitted WHILE a long prompt prefills,
+  the insert-splice family is gone, pool invariants + budget bound hold
+  after every chunk boundary, and a full mixed workload compiles <= 3
+  distinct programs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.configs.base import ModelConfig
+from repro.core import append_chunk, decode_append, get_policy, to_contiguous
+from repro.models import (
+    decode_step,
+    forward_step,
+    init_decode_caches,
+    init_model,
+)
+from repro.serving import Engine
+from repro.serving.request import RequestStatus
+
+from tests.test_pool_invariants import _assert_pool_invariants
+
+ATOL = 1e-4
+
+TINY = ModelConfig(name="tiny-chunk", arch_type="dense", source="test-only",
+                   num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+                   head_dim=32, d_ff=128, vocab_size=97, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return TINY, init_model(jax.random.PRNGKey(0), TINY)
+
+
+def _prefill_chunked(cfg, params, prompt, policy, ccfg, chunk, total_len):
+    """Feed a prompt through the unified step in ``chunk``-token pieces."""
+    pol = get_policy(policy)
+    cache = init_decode_caches(cfg, 1, total_len, pol, ccfg,
+                               chunk_tokens=chunk)
+    step = jax.jit(lambda p, t, n, c: forward_step(
+        p, cfg, t, n, c, pol, ccfg, prefill_mask=jnp.ones((1,), bool)))
+    logits = None
+    for s in range(0, len(prompt), chunk):
+        piece = prompt[s:s + chunk]
+        buf = np.zeros((1, chunk), np.int32)
+        buf[0, :len(piece)] = piece
+        logits, cache = step(params, jnp.asarray(buf),
+                             jnp.asarray([len(piece)], jnp.int32), cache)
+    return logits, cache
+
+
+def _sorted_tokens(cache, rep):
+    """(pos, k, v) of one stacked layer rep, sorted by position — physical
+    placement is semantics-free, so comparisons align on positions."""
+    lc = jax.tree.map(lambda a: a[rep], cache.pattern[0].kv)
+    k, v, pos, valid = [np.asarray(a[0]) for a in to_contiguous(lc)]
+    order = np.argsort(np.where(valid, pos, np.iinfo(np.int32).max),
+                       kind="stable")
+    n = int(valid.sum())
+    return pos[order][:n], k[order][:n], v[order][:n]
+
+
+@pytest.mark.parametrize("policy", ["full", "paged_eviction"])
+def test_chunked_vs_monolithic_equivalence(tiny_model, policy):
+    """Chunk sizes {64, 256, prompt_len}: identical surviving tokens, cache
+    contents (every layer), and final-token logits."""
+    cfg, params = tiny_model
+    prompt_len = 320
+    prompt = (np.arange(prompt_len, dtype=np.int32) * 7) % cfg.vocab_size
+    ccfg = CacheConfig(page_size=16, cache_budget=256, policy=policy,
+                       dtype="float32")
+    ref_lg, ref_cache = _prefill_chunked(cfg, params, prompt, policy, ccfg,
+                                         prompt_len, prompt_len + 8)
+    if policy == "paged_eviction":
+        # compression actually fired: 320 tokens -> 16 full pages = budget
+        p0, _, _ = _sorted_tokens(ref_cache, 0)
+        assert len(p0) == 256, len(p0)
+    for chunk in (64, 256):
+        lg, cache = _prefill_chunked(cfg, params, prompt, policy, ccfg,
+                                     chunk, prompt_len + 8)
+        for rep in range(cfg.num_layers):
+            p1, k1, v1 = _sorted_tokens(ref_cache, rep)
+            p2, k2, v2 = _sorted_tokens(cache, rep)
+            np.testing.assert_array_equal(p1, p2,
+                                          err_msg=f"{policy} chunk {chunk}")
+            np.testing.assert_allclose(k1, k2, atol=ATOL, rtol=ATOL)
+            np.testing.assert_allclose(v1, v2, atol=ATOL, rtol=ATOL)
+        np.testing.assert_allclose(np.asarray(ref_lg), np.asarray(lg),
+                                   atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("policy", ["paged_eviction", "streaming_llm",
+                                    "inverse_key_l2"])
+def test_mid_prefill_eviction_invariants_and_budget(tiny_model, policy):
+    """Budget << prompt: compression fires at EVERY boundary. Exact
+    equivalence is out (later chunks attend a pruned prefix — the paper's
+    chunked integration); what must hold after every boundary: pool
+    invariants F1-F4 and the budget bound."""
+    cfg, params = tiny_model
+    prompt = (np.arange(160, dtype=np.int32) * 11) % cfg.vocab_size
+    budget, page, chunk = 64, 16, 32
+    ccfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                       dtype="float32")
+    pol = get_policy(policy)
+    cache = init_decode_caches(cfg, 1, 200, pol, ccfg, chunk_tokens=chunk)
+    for s in range(0, len(prompt), chunk):
+        buf = np.zeros((1, chunk), np.int32)
+        piece = prompt[s:s + chunk]
+        buf[0, :len(piece)] = piece
+        _, cache = forward_step(params, cfg, jnp.asarray(buf),
+                                jnp.asarray([len(piece)], jnp.int32), cache,
+                                pol, ccfg, prefill_mask=jnp.ones((1,), bool))
+        for rep in range(cfg.num_layers):
+            lc = jax.tree.map(lambda a: a[rep], cache.pattern[0].kv)
+            _assert_pool_invariants(lc, f"{policy} boundary {s}")
+            tv = int(np.asarray(lc.total_valid())[0])
+            assert tv <= budget + page, (policy, s, tv)
+
+
+def test_forward_step_T1_matches_decode_step(tiny_model):
+    """The unified program at T == 1 with a decode row reproduces
+    decode_step exactly (same Alg.3 bookkeeping, same attention)."""
+    cfg, params = tiny_model
+    policy = "paged_eviction"
+    ccfg = CacheConfig(page_size=16, cache_budget=32, policy=policy,
+                       dtype="float32")
+    pol = get_policy(policy)
+    prompt = (np.arange(48, dtype=np.int32) * 5) % cfg.vocab_size
+    _, cache = _prefill_chunked(cfg, params, prompt, policy, ccfg, 16, 96)
+    tok = jnp.asarray([[3]], jnp.int32)
+    for _ in range(12):
+        lg_a, cache_a = decode_step(params, cfg, tok[:, 0], cache, pol, ccfg)
+        lg_b, cache_b = forward_step(
+            params, cfg, tok, jnp.asarray([1], jnp.int32), cache, pol, ccfg,
+            decode_mask=jnp.ones((1,), bool),
+            prefill_mask=jnp.zeros((1,), bool))
+        np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b),
+                                   atol=1e-5, rtol=1e-5)
+        for rep in range(cfg.num_layers):
+            a = jax.tree.map(lambda x: x[rep], cache_a.pattern[0].kv)
+            b = jax.tree.map(lambda x: x[rep], cache_b.pattern[0].kv)
+            np.testing.assert_array_equal(np.asarray(a.pos),
+                                          np.asarray(b.pos))
+            np.testing.assert_array_equal(np.asarray(a.block_table),
+                                          np.asarray(b.block_table))
+        cache = cache_a
+        tok = jnp.argmax(lg_a, -1).astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# paged flash-prefill kernel parity
+# ---------------------------------------------------------------------------
+
+def _churned_cache(policy="paged_eviction", page=8, B=2, KV=2, hd=64, seed=0):
+    """Decode-trace a pooled cache far past budget so physical pages are
+    freed and REALLOCATED across requests, then it is chunk-ready."""
+    budget = 2 * page
+    cfg = CacheConfig(page_size=page, cache_budget=budget, policy=policy,
+                      dtype="float32")
+    pol = get_policy(policy)
+    steps = budget + 3 * page + 3
+    from repro.core import init_layer_cache
+    pages = pol.slab_pages(cfg, steps) + 3          # chunk headroom
+    cache = init_layer_cache(B, pages, page, KV, hd, jnp.float32)
+    rng = jax.random.PRNGKey(seed)
+    for t in range(steps):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        cache = decode_append(cache, jax.random.normal(k1, (B, KV, hd)),
+                              jax.random.normal(k2, (B, KV, hd)),
+                              jnp.full((B,), t), pol, cfg).cache
+    return cache, steps
+
+
+@pytest.mark.parametrize("window", [0, 16])
+def test_paged_flash_prefill_kernel_matches_refs(window):
+    """Kernel vs jnp oracle vs model-layer oracle on a chunk appended to a
+    cache that straddles freed-and-reallocated pages; one row shorter than
+    the chunk exercises padding-query masking."""
+    from repro.kernels import ops, ref
+    from repro.models.attention import paged_attention_chunk_ref
+
+    B, KV, G, hd, T = 2, 2, 2, 64, 16
+    cache, steps = _churned_cache(page=8, B=B, KV=KV, hd=hd)
+    rng = jax.random.PRNGKey(42)
+    n_tok = jnp.array([T, T - 5])
+    q_pos = steps + jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    q_pos = jnp.where(jnp.arange(T)[None] < n_tok[:, None], q_pos, -1)
+    kc = jax.random.normal(rng, (B, T, KV, hd))
+    vc = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, KV, hd))
+    cache = append_chunk(cache, kc, vc, q_pos, jnp.zeros((B, T)), n_tok)
+    q = jax.random.normal(jax.random.fold_in(rng, 2), (B, T, KV * G, hd))
+
+    out = np.asarray(ops.paged_prefill_attention(q, cache, q_pos=q_pos,
+                                                 window=window))
+    oracle = np.asarray(ref.paged_prefill_attention_block_table_ref(
+        q.reshape(B, T, KV, G, hd), jnp.moveaxis(cache.k, 2, 0),
+        jnp.moveaxis(cache.v, 2, 0), cache.pos, cache.block_table, q_pos,
+        window=window).reshape(B, T, KV * G, hd))
+    model_ref = np.asarray(paged_attention_chunk_ref(q, cache, q_pos=q_pos,
+                                                     window=window))
+    np.testing.assert_allclose(out, oracle, atol=ATOL, rtol=ATOL)
+    np.testing.assert_allclose(out, model_ref, atol=ATOL, rtol=ATOL)
+    # padding queries emit exactly zero
+    assert (out[1, T - 5:] == 0).all()
+
+
+def test_paged_flash_prefill_kernel_isolates_requests():
+    """Each chunk row must only see its own block table even though the
+    pool interleaves requests' pages after churn."""
+    from repro.kernels import ops
+
+    B, KV, G, hd, T = 3, 2, 2, 64, 8
+    cache, steps = _churned_cache(page=8, B=B, seed=5)
+    rng = jax.random.PRNGKey(7)
+    q_pos = steps + jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    kc = jax.random.normal(rng, (B, T, KV, hd))
+    cache = append_chunk(cache, kc, kc, q_pos, jnp.zeros((B, T)),
+                         jnp.full((B,), T))
+    q = jax.random.normal(jax.random.fold_in(rng, 3), (B, T, KV * G, hd))
+    batched = np.asarray(ops.paged_prefill_attention(q, cache, q_pos=q_pos))
+    for b in range(B):
+        solo_cache = cache._replace(block_table=cache.block_table[b:b + 1],
+                                    cur_page=cache.cur_page[b:b + 1],
+                                    cur_off=cache.cur_off[b:b + 1])
+        solo = np.asarray(ops.paged_prefill_attention(
+            q[b:b + 1], solo_cache, q_pos=q_pos[b:b + 1]))
+        np.testing.assert_allclose(batched[b:b + 1], solo, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# engine level: the acceptance scenario
+# ---------------------------------------------------------------------------
+
+def _engine_layer_caches(eng):
+    for lc in list(eng.cache.pattern):
+        R = jax.tree.leaves(lc.kv)[0].shape[0]
+        for rep in range(R):
+            yield jax.tree.map(lambda a: a[rep], lc.kv)
+    for lc in eng.cache.tail:
+        if lc.kv is not None:
+            yield lc.kv
+
+
+def test_decode_interleaves_with_long_prefill():
+    """1 long prompt + 7 active decode slots: decode tokens are emitted
+    DURING the long prompt's prefill, the insert splice is gone, and pool
+    invariants + budget bound hold after every chunk boundary."""
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    budget, page = 32, 8
+    ccfg = CacheConfig(page_size=page, cache_budget=budget,
+                       policy="paged_eviction", dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=8, max_prompt_len=64,
+                 max_new_tokens=40, chunk_size=8)
+
+    # the splice family is dead
+    from repro.models import transformer
+    assert not hasattr(eng, "_insert_fn")
+    assert not hasattr(eng, "_prefill_fn")
+    assert not hasattr(transformer, "insert_request_cache")
+
+    rng = np.random.default_rng(1)
+    short = [eng.submit(rng.integers(0, cfg.vocab_size, size=6)
+                        .astype(np.int32)) for _ in range(7)]
+    # bring all 7 to RUNNING
+    for _ in range(4):
+        eng.step()
+        if all(r.status == RequestStatus.RUNNING for r in short):
+            break
+    assert all(r.status == RequestStatus.RUNNING for r in short)
+
+    long_req = eng.submit(rng.integers(0, cfg.vocab_size, size=64)
+                          .astype(np.int32))
+    gen_before = sum(r.num_generated for r in short)
+    prefill_steps = 0
+    while long_req.status == RequestStatus.PREFILLING or \
+            long_req.status == RequestStatus.WAITING:
+        assert eng.step()
+        prefill_steps += 1
+        for i, lc in enumerate(_engine_layer_caches(eng)):
+            _assert_pool_invariants(lc, f"step {prefill_steps} layer {i}")
+            tv = np.asarray(lc.total_valid())
+            # chunk boundaries keep every row within budget + page slack
+            assert (tv <= budget + page).all(), (prefill_steps, i, tv)
+        assert prefill_steps < 64, "long prompt never finished prefilling"
+    gen_during = sum(r.num_generated for r in short) - gen_before
+    # 64-token prompt / 8-token chunks spread over >= 8 steps, and the
+    # decode slots kept emitting THROUGHOUT — the old engine emitted 0 here
+    assert prefill_steps >= 8, prefill_steps
+    assert gen_during >= 7 * (prefill_steps - 1), (gen_during, prefill_steps)
+    assert long_req.num_generated >= 1          # TTFT token emitted
+
+    eng.run()
+    assert long_req.finished and all(r.finished for r in short)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["jamba-1.5-large-398b", "xlstm-1.3b",
+                                  "mixtral-8x7b", "gemma3-27b"])
+def test_unified_step_serves_heterogeneous_archs(arch):
+    """forward_step's recurrent-scan / MoE / windowed-attention branches:
+    hybrid (mamba+attn+moe), xLSTM, MoE, and local/global interleave all
+    serve end-to-end through the chunked engine."""
+    cfg = ASSIGNED_ARCHS[arch].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=32, policy="paged_eviction",
+                       dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=2, max_prompt_len=32,
+                 max_new_tokens=4, chunk_size=8)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=n)
+                       .astype(np.int32)) for n in (20, 11, 26)]
+    done = eng.run()
+    assert len(done) == 3
+    for r in reqs:
+        assert r.finished and r.num_generated == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.output_tokens)
+
+
+def test_engine_compiles_at_most_three_programs():
+    """Full mixed workload (admissions, mixed steps, decode-only steps,
+    retirements, re-admissions): <= 3 distinct compiled programs — the
+    static_argnames=("slot",) recompilation family is extinct."""
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=32, policy="paged_eviction",
+                       dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=3, max_prompt_len=48,
+                 max_new_tokens=6, chunk_size=16)
+    rng = np.random.default_rng(3)
+    for n in (4, 30, 47, 9, 21, 40):            # forces re-admission churn
+        eng.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32))
+    done = eng.run()
+    assert len(done) == 6
+    n_programs = eng.num_compiled_programs()
+    assert n_programs != -1, "program-count introspection unavailable"
+    assert n_programs <= 3, n_programs          # expect exactly 2

@@ -147,32 +147,125 @@ def test_write_prompt_pages_layout():
     assert len(mapped) == len(set(mapped.tolist()))
 
 
-def test_insert_request_splices_row():
-    B, P, page = 3, 3, 4
-    dst = _cache(B=B, P=P, page=page)
+def test_append_chunk_matches_sequential_writes():
+    """append_chunk (the unified-step write path) must produce exactly the
+    cache a per-token write_token + rollover sequence produces — pages
+    filled in order, fresh pages from the free list at each boundary."""
+    B, P, page, T = 2, 4, 4, 10
+    c = _cache(B=B, P=P, page=page)
     rng = jax.random.PRNGKey(0)
-    for i in range(3):
-        rng, k1 = jax.random.split(rng)
-        dst = pc.write_token(dst, jax.random.normal(k1, (B, 2, 8)),
-                             jnp.ones((B, 2, 8)), jnp.full((B,), i),
-                             jnp.zeros(B))
-    src = _cache(B=1, P=P, page=page)
-    for i in range(2):
-        rng, k1 = jax.random.split(rng)
-        src = pc.write_token(src, jax.random.normal(k1, (1, 2, 8)),
-                             jnp.ones((1, 2, 8)), jnp.full((1,), i),
-                             jnp.zeros(1))
-    out = pc.insert_request(dst, src, 1)
-    np.testing.assert_array_equal(np.asarray(out.pos_view()[1]),
-                                  np.asarray(src.pos_view()[0]))
-    np.testing.assert_array_equal(np.asarray(out.pos_view()[0]),
-                                  np.asarray(dst.pos_view()[0]))
-    m = np.asarray(out.valid_mask()[1])[..., None, None]
-    np.testing.assert_allclose(np.asarray(out.k_view()[1]) * m,
-                               np.asarray(src.k_view()[0]) * m, atol=1e-6)
-    # free-list conservation after the splice
-    ref = np.asarray(out.ref_count)
-    bt = np.asarray(out.block_table)
+    k = jax.random.normal(rng, (B, T, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (B, T, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    n_tok = jnp.array([T, 7])
+    pos = jnp.where(jnp.arange(T)[None] < n_tok[:, None], pos, -1)
+    score = jnp.zeros((B, T))
+    out = pc.append_chunk(c, k, v, pos, score, n_tok)
+
+    seq = c
+    for t in range(T):
+        act = jnp.arange(T)[t] < n_tok
+        seq = pc.chunk_rollover(seq, act & (seq.cur_off >= seq.page_size))
+        seq = pc.write_token(seq, k[:, t], v[:, t], pos[:, t], score[:, t],
+                             active=act)
+    for name in ("k", "v", "pos", "score", "block_table", "ref_count",
+                 "cur_page", "cur_off"):
+        np.testing.assert_array_equal(np.asarray(getattr(out, name)),
+                                      np.asarray(getattr(seq, name)),
+                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(out.total_valid()), [T, 7])
+
+
+def test_append_chunk_allocates_from_shared_free_list():
+    """A chunk spanning several pages draws distinct pool pages per rollover
+    and conserves the free list (F1-F3)."""
+    B, P, page = 2, 4, 4
+    c = _cache(B=B, P=P, page=page)
+    T = 3 * page
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    c = pc.append_chunk(c, jnp.ones((B, T, 2, 8)), jnp.ones((B, T, 2, 8)),
+                        pos, jnp.zeros((B, T)), jnp.full((B,), T))
+    assert (np.asarray(c.total_valid()) == T).all()
+    bt = np.asarray(c.block_table)
+    mapped = bt[bt >= 0]
+    assert len(mapped) == len(set(mapped.tolist()))          # F3
+    ref = np.asarray(c.ref_count)
+    np.testing.assert_array_equal(np.bincount(mapped, minlength=c.pool_pages),
+                                  ref)                       # F2
+    assert int((ref > 0).sum()) + int(c.num_free()) == c.pool_pages  # F1
+
+
+def test_release_rows_returns_pages_and_rearms_head():
+    """release_rows frees a retiring row's pages to the SHARED pool and
+    parks the head so the next append re-allocates from the free list."""
+    B, P, page = 2, 4, 4
+    c = _cache(B=B, P=P, page=page)
+    T = 2 * page
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    c = pc.append_chunk(c, jnp.ones((B, T, 2, 8)), jnp.ones((B, T, 2, 8)),
+                        pos, jnp.zeros((B, T)), jnp.full((B,), T))
+    free0 = int(c.num_free())
+    c = pc.release_rows(c, jnp.array([True, False]))
+    assert int(c.num_free()) == free0 + 2   # both full pages back in the pool
+    assert (np.asarray(c.block_table)[0] == -1).all()
+    assert int(c.total_valid()[0]) == 0
+    assert int(c.total_valid()[1]) == T     # other row untouched
+    # a fresh request appends into the released row: first write rolls onto
+    # a freshly allocated page (no dangling head)
+    c = pc.append_chunk(c, jnp.ones((B, 3, 2, 8)), jnp.ones((B, 3, 2, 8)),
+                        jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32), (B, 3)),
+                        jnp.zeros((B, 3)), jnp.array([3, 0]))
+    assert int(c.total_valid()[0]) == 3
+    bt = np.asarray(c.block_table)
     mapped = bt[bt >= 0]
     assert len(mapped) == len(set(mapped.tolist()))
-    assert int((ref > 0).sum()) + int(out.num_free()) == out.pool_pages
+
+
+def test_append_chunk_force_evicts_when_pool_dry():
+    """Unstructured token policies can pin every logical slot with
+    one-token survivor pages; the chunk rollover must then force-evict the
+    fewest-token page rather than silently drop the incoming K/V."""
+    B, P, page = 1, 3, 4
+    c = _cache(B=B, P=P, page=page)                 # pool == 3 pages
+    T = 3 * page
+    pos = jnp.arange(T, dtype=jnp.int32)[None]
+    c = pc.append_chunk(c, jnp.ones((B, T, 2, 8)), jnp.ones((B, T, 2, 8)),
+                        pos, jnp.zeros((B, T)), jnp.full((B,), T))
+    # fragment: keep exactly one token per page (offsets 1..3 evicted)
+    frag = jnp.broadcast_to(jnp.arange(page) > 0, (B, P, page))
+    c = pc.evict_token_mask(c, frag)
+    assert int(c.total_valid()[0]) == P
+    assert int(c.num_free()) == 0                   # every slot pinned
+    new_pos = T + jnp.arange(page, dtype=jnp.int32)[None]
+    c = pc.append_chunk(c, jnp.ones((B, page, 2, 8)),
+                        jnp.ones((B, page, 2, 8)), new_pos,
+                        jnp.zeros((B, page)), jnp.full((B,), page))
+    got = np.asarray(c.pos_view()[0]).reshape(-1)
+    for p_ in range(T, T + page):                   # the chunk LANDED
+        assert p_ in got, (p_, got)
+    # one survivor page was force-evicted to make room
+    assert int(c.total_valid()[0]) == P - 1 + page
+    ref = np.asarray(c.ref_count)
+    bt = np.asarray(c.block_table)
+    mapped = bt[bt >= 0]
+    np.testing.assert_array_equal(np.bincount(mapped, minlength=c.pool_pages),
+                                  ref)
+    assert (np.asarray(c.pos)[ref == 0] == -1).all()
+
+
+def test_evict_pages_mask_multi_victim():
+    B, P, page = 2, 4, 4
+    c = _cache(B=B, P=P, page=page)
+    T = 3 * page
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    c = pc.append_chunk(c, jnp.ones((B, T, 2, 8)), jnp.ones((B, T, 2, 8)),
+                        pos, jnp.zeros((B, T)), jnp.full((B,), T))
+    mask = jnp.array([[True, True, False, False],
+                      [False, False, False, False]])
+    free0 = int(c.num_free())
+    c = pc.evict_pages_mask(c, mask)
+    assert int(c.num_free()) == free0 + 2
+    assert int(c.total_valid()[0]) == page
+    assert int(c.total_valid()[1]) == T
+    ref = np.asarray(c.ref_count)
+    assert (np.asarray(c.pos)[ref == 0] == -1).all()         # F4

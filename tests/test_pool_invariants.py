@@ -18,11 +18,12 @@ import pytest
 from repro.configs import CacheConfig
 from repro.core import (
     POLICIES,
+    append_chunk,
     decode_append,
     evict_page,
     get_policy,
     init_layer_cache,
-    insert_request,
+    release_rows,
 )
 
 
@@ -112,9 +113,10 @@ def test_evicted_pages_become_other_requests_headroom(policy):
     _assert_pool_invariants(cache, "end")
 
 
-def test_explicit_evict_page_frees_and_insert_reuses():
-    """evict_page returns pages to the free list; insert_request draws from
-    it without disturbing other rows."""
+def test_explicit_evict_page_frees_and_release_then_append_reuses():
+    """evict_page returns pages to the free list; release_rows + append_chunk
+    (the unified-step admission path, replacing the old insert splice)
+    draws from it without disturbing other rows."""
     page = 4
     cache = init_layer_cache(3, 4, page, 1, 8, jnp.float32)
     rng = jax.random.PRNGKey(2)
@@ -132,17 +134,21 @@ def test_explicit_evict_page_frees_and_insert_reuses():
     assert int(cache.num_free()) == free0 + 1
     _assert_pool_invariants(cache, "after explicit evict")
 
-    single = init_layer_cache(1, 4, page, 1, 8, jnp.float32)
-    for t in range(6):
-        rng, k1, k2 = jax.random.split(rng, 3)
-        single = decode_append(single, jax.random.normal(k1, (1, 1, 8)),
-                               jax.random.normal(k2, (1, 1, 8)),
-                               jnp.full((1,), t), pol, cfg).cache
+    # row 0 retires; a new request's first chunk prefills in place
     before_row2 = np.asarray(cache.pos_view()[2])
-    cache = insert_request(cache, single, 0)
-    _assert_pool_invariants(cache, "after insert")
-    np.testing.assert_array_equal(np.asarray(cache.pos_view()[0]),
-                                  np.asarray(single.pos_view()[0]))
+    cache = release_rows(cache, jnp.array([True, False, False]))
+    _assert_pool_invariants(cache, "after release")
+    T = 6
+    rng, k1, k2 = jax.random.split(rng, 3)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (3, T))
+    n_tok = jnp.array([T, 0, 0])
+    pos = jnp.where(jnp.arange(T)[None] < n_tok[:, None], pos, -1)
+    cache = append_chunk(cache, jax.random.normal(k1, (3, T, 1, 8)),
+                         jax.random.normal(k2, (3, T, 1, 8)),
+                         pos, jnp.zeros((3, T)), n_tok)
+    _assert_pool_invariants(cache, "after admission chunk")
+    got = np.sort(np.asarray(cache.pos_view()[0]).reshape(-1))
+    np.testing.assert_array_equal(got[-T:], np.arange(T))
     np.testing.assert_array_equal(np.asarray(cache.pos_view()[2]), before_row2)
 
 

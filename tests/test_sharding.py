@@ -70,6 +70,32 @@ def test_opt_specs_divisible_zero1(mesh):
     _check_divisible(oshapes.mu, _spec_tree(osh.mu), mesh)
 
 
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_step_input_specs_divisible(mesh):
+    """Unified-step / paged flash-prefill kernel operand specs (DESIGN.md
+    §6): batch over DP, chunk-query heads over model iff divisible."""
+    for arch in ("qwen2.5-3b", "mixtral-8x7b", "gemma3-27b"):
+        cfg = ASSIGNED_ARCHS[arch]
+        B, T = DECODE_32K.global_batch, 256
+        sh = rules.step_input_shardings(mesh, cfg, B, T)
+        shapes = {
+            "tokens": jnp.zeros((B, T), jnp.int32),
+            "n_tok": jnp.zeros((B,), jnp.int32),
+            "mask": jnp.zeros((B,), bool),
+            "q": jnp.zeros((B, T, cfg.num_heads, cfg.resolved_head_dim)),
+            "q_pos": jnp.zeros((B, T), jnp.int32),
+            "block_table": jnp.zeros((B, 64), jnp.int32),
+        }
+        for name, spec in sh.items():
+            _check_divisible([jax.eval_shape(lambda: shapes[name])],
+                             [spec], mesh)
+        # q heads must actually take the model axis when divisible
+        msz = int(np.prod([mesh.shape[a] for a in ("model",)
+                           if a in mesh.shape]))
+        if cfg.num_heads % msz == 0 and msz > 1:
+            assert sh["q"][2] is not None, arch
+
+
 def test_batch_axes_fallbacks():
     assert rules.batch_axes(SINGLE, 256) == "data"
     assert rules.batch_axes(MULTI, 256) == ("pod", "data")
