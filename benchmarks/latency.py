@@ -32,6 +32,8 @@ SIZES = {"1b": ("llama-3.2-1b", 128), "3b": ("llama-3.2-3b", 192),
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_prefill.json"
+BENCH_LATENCY_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_latency.json"
 
 
 def run_mixed_latency(chunk_size: int, *, prompt_len: int = 64,
@@ -77,15 +79,70 @@ def run_mixed_latency(chunk_size: int, *, prompt_len: int = 64,
     }
 
 
+def run_shared_prefix(*, n_requests: int = 3, prefix_len: int = 40,
+                      tail_len: int = 16, new_tokens: int = 8,
+                      budget: int = 64, page: int = 8, seed: int = 0) -> dict:
+    """Shared-prefix mixed load (DESIGN.md §7): ``n_requests`` prompts with a
+    common ``prefix_len``-token head, run with CoW prefix sharing on vs off.
+    Sharing lets every request after the first adopt the resident prefix
+    pages, skipping those prompt chunks entirely — fewer prefill steps,
+    lower follower TTFT, and fewer physical pool pages in flight."""
+    cfg, params = reduced_model("qwen2.5-3b")
+    prompt_len = prefix_len + tail_len
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len)
+    prompts = [np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab_size, size=tail_len)])
+        .astype(np.int32) for _ in range(n_requests)]
+
+    def one(sharing: bool) -> dict:
+        ccfg = CacheConfig(page_size=page, cache_budget=budget,
+                           policy="paged_eviction", dtype="float32")
+        eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=n_requests + 1,
+                     max_prompt_len=prompt_len + page,
+                     max_new_tokens=new_tokens,
+                     sampling=SamplingParams(greedy=True), seed=seed,
+                     chunk_size=16, prefix_sharing=sharing)
+        for p in prompts:
+            eng.submit(p)
+        peak = 0
+        while eng.step():
+            ps = eng.pool_stats()
+            peak = max(peak, ps["pool_pages"] - ps["free_pages"])
+        done = eng.scheduler.finished
+        ttfts = sorted(r.ttft * 1e3 for r in done if r.ttft > 0)
+        return {
+            "prefix_sharing": sharing,
+            "steps": eng.stats.steps,
+            "shared_prefix_hits": eng.stats.shared_prefix_hits,
+            "prompt_tokens_skipped": eng.stats.shared_prefix_tokens,
+            "peak_pool_pages": peak,
+            # followers adopt the prefix, so the TTFT tail is where the
+            # sharing win shows up (the first request always prefills fully)
+            "ttft_ms_first": ttfts[0] if ttfts else None,
+            "ttft_ms_max": ttfts[-1] if ttfts else None,
+        }
+
+    return {
+        "setup": {"arch": "qwen2.5-3b (reduced)", "n_requests": n_requests,
+                  "prefix_len": prefix_len, "tail_len": tail_len,
+                  "policy": "paged_eviction", "budget": budget, "page": page},
+        "sharing": one(True),
+        "no_sharing": one(False),
+    }
+
+
 def run_prefill_modes(prompt_len: int = 64) -> dict:
     """Chunked (16-token chunks) vs monolithic (whole-prompt chunk) under
-    the same mixed load; writes BENCH_prefill.json."""
+    the same mixed load, plus the shared-prefix scenario; writes
+    BENCH_prefill.json."""
     out = {
         "setup": {"arch": "qwen2.5-3b (reduced)", "prompt_len": prompt_len,
                   "short_decoders": 3, "policy": "paged_eviction",
                   "budget": 32, "page": 8},
         "chunked": run_mixed_latency(16, prompt_len=prompt_len),
         "monolithic": run_mixed_latency(prompt_len, prompt_len=prompt_len),
+        "shared_prefix": run_shared_prefix(),
     }
     BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
@@ -94,6 +151,12 @@ def run_prefill_modes(prompt_len: int = 64) -> dict:
         print(f"  {mode:>10}: ttft={r['long_ttft_ms']:.1f}ms "
               f"itl_max={r['decoder_itl_max_ms']:.1f}ms "
               f"decode_during_prefill={r['decode_tokens_during_prefill']}")
+    for mode in ("sharing", "no_sharing"):
+        r = out["shared_prefix"][mode]
+        print(f"  {mode:>10}: steps={r['steps']} "
+              f"skipped={r['prompt_tokens_skipped']} "
+              f"peak_pages={r['peak_pool_pages']} "
+              f"ttft_max={r['ttft_ms_max']:.1f}ms")
     return out
 
 
@@ -111,6 +174,18 @@ def run(budget: int = 64, page: int = 8, quick: bool = False):
                                   model=(cfg, params))
             rows.append((tag, pol, r))
             print(f"  tpot,{tag},{pol},{r.tpot_ms:.2f} ms/token")
+    # latency results land in a committed artifact on EVERY run — the TPOT
+    # ladder used to live only in stdout and silently went stale
+    out = {
+        "setup": {"budget": budget, "page": page, "quick": quick,
+                  "sizes": {t: a for t, (a, _) in SIZES.items()}},
+        "tpot_ms": [{"size": tag, "policy": pol, "tpot_ms": r.tpot_ms,
+                     "throughput_tok_s": r.throughput_tok_s,
+                     "pool_utilization": r.pool_utilization}
+                    for tag, pol, r in rows],
+    }
+    BENCH_LATENCY_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_LATENCY_JSON}")
     return rows
 
 

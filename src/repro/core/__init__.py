@@ -1,11 +1,14 @@
 """PagedEviction core: paged KV cache + structured block-wise eviction."""
 from repro.core.paged_cache import (
     PagedLayerCache,
+    adopt_prefix,
     alloc_pages,
     append_chunk,
     chunk_rollover,
+    fork_page,
     init_layer_cache,
     release_rows,
+    row_intact_prefix_pages,
     write_token,
     write_prompt_pages,
     evict_page,
@@ -33,8 +36,9 @@ from repro.core.decode import decode_append
 from repro.core import importance
 
 __all__ = [
-    "PagedLayerCache", "alloc_pages", "append_chunk", "chunk_rollover",
-    "init_layer_cache", "release_rows", "write_token", "write_prompt_pages",
+    "PagedLayerCache", "adopt_prefix", "alloc_pages", "append_chunk",
+    "chunk_rollover", "fork_page", "init_layer_cache", "release_rows",
+    "row_intact_prefix_pages", "write_token", "write_prompt_pages",
     "evict_page", "evict_pages_mask", "evict_token", "evict_token_mask",
     "find_free_slot", "reclaim_empty_pages", "start_new_page",
     "to_contiguous", "POLICIES", "EvictionOutcome", "EvictionPolicy",

@@ -13,9 +13,13 @@ Layout (per attention layer; see DESIGN.md §2):
 
 The free list is the ``ref_count == 0`` mask; :func:`alloc_pages` always
 hands out the lowest-index free pages (deterministic, batch-safe — the i-th
-allocating request gets the i-th free page). ``ref_count`` is an int (not a
-bool) so later PRs can share physical pages between block tables (prefix
-caching) without changing the allocator protocol.
+allocating request gets the i-th free page). ``ref_count`` is a true count:
+:func:`adopt_prefix` maps one physical page under SEVERAL block tables
+(prefix sharing), so releasing a page means *decrementing* — the page's
+data is only invalidated (and the page recycled) when the count reaches 0.
+Every release path funnels through :func:`_unref_pages`, which enforces the
+unmap-vs-free split and clamps at 0 so a double-release can never drive a
+slot negative (and never clobbers a page some other table still maps).
 
 Under an eviction policy with budget C and page size Bp, P is statically
 ``C/Bp + 1`` per request and ``N_pool = B * P`` by default — the budget makes
@@ -30,9 +34,20 @@ on the free list. No data movement, ever (the paper's point).
 
 Invariants (tests/test_pool_invariants.py):
     F1  allocated + free == N_pool          (free-list conservation)
-    F2  ref_count[p] == number of block-table entries mapping p (<=1 for now)
-    F3  no physical page is mapped by two block-table entries
+    F2  ref_count[p] == number of block-table entries mapping p (ACROSS all
+        requests — shared prefix pages legitimately carry counts > 1)
+    F3  no physical page is mapped twice by the SAME block table (cross-
+        request double-mapping is exactly what prefix sharing is)
     F4  free pages hold no live tokens (their pos rows are all -1)
+
+Sharing semantics (DESIGN.md §7): shared pages are always COMPLETE prompt
+pages and are immutable — the write head never points at one (adopt_prefix
+parks the head full so the next append rolls onto a fresh exclusive page).
+Page-level eviction of a shared page is an unmap: the evicting request
+drops its mapping and one reference; k/v/pos/score survive untouched for
+every other mapper. Token-level eviction inside a shared page must
+copy-on-write first (:func:`fork_page`) — the fork gives the mutating
+request a private copy and releases one reference on the original.
 """
 from __future__ import annotations
 
@@ -221,16 +236,37 @@ def alloc_pages(cache: PagedLayerCache, need):
     return cache._replace(ref_count=ref), phys, ok
 
 
-def _free_phys(cache: PagedLayerCache, phys, enable) -> PagedLayerCache:
-    """Return physical pages to the free list (pos/score invalidated).
-    phys: (B,) physical ids; enable: (B,) bool."""
+def _unref_pages(cache: PagedLayerCache, tgt) -> PagedLayerCache:
+    """Release one reference per entry of ``tgt`` (flattened physical ids;
+    the pool size N is the masked-out sentinel). The single funnel for EVERY
+    release path, enforcing the unmap-vs-free split:
+
+    - ref_count decrements are clamped at 0 — a double-release (the latent
+      underflow at the old ``add(-1)`` sites) can never drive a slot
+      negative and thereby fake an allocated page.
+    - pos/score are invalidated ONLY for pages whose count reaches 0. A page
+      some other block table still maps (ref stays > 0 — a shared prefix
+      page) keeps its k/v/pos/score intact: releasing is unmapping, never
+      data destruction, so :func:`alloc_pages` (free == ref_count 0) can
+      never recycle a page whose refcount is still positive.
+
+    Duplicate targets (several rows releasing the same shared page in one
+    batched op) accumulate correctly via scatter-add."""
     N = cache.pool_pages
-    tgt = jnp.where(enable, phys, N)
+    dec = jnp.zeros((N + 1,), jnp.int32).at[tgt].add(1)[:N]
+    new_ref = jnp.maximum(cache.ref_count - dec, 0)
+    newly_free = (dec > 0) & (cache.ref_count > 0) & (new_ref == 0)
     return cache._replace(
-        pos=cache.pos.at[tgt].set(-1),
-        score=cache.score.at[tgt].set(-jnp.inf),
-        ref_count=cache.ref_count.at[tgt].add(-1),
+        pos=jnp.where(newly_free[:, None], -1, cache.pos),
+        score=jnp.where(newly_free[:, None], -jnp.inf, cache.score),
+        ref_count=new_ref,
     )
+
+
+def _free_phys(cache: PagedLayerCache, phys, enable) -> PagedLayerCache:
+    """Release one reference on (B,) physical pages where ``enable``; data is
+    invalidated only if the page's count reaches 0 (see _unref_pages)."""
+    return _unref_pages(cache, jnp.where(enable, phys, cache.pool_pages))
 
 
 def find_free_slot(cache: PagedLayerCache):
@@ -273,11 +309,10 @@ def reclaim_empty_pages(cache: PagedLayerCache, include_current=None
     dead = cache.mapped_mask() & (cache.tokens_per_page() == 0) & \
         (~is_cur | include_current[:, None])          # (B, P)
     # empty pages already hold pos == -1 everywhere (F4): freeing is just
-    # a ref_count decrement + block-table unmap
+    # a clamped ref_count decrement + block-table unmap
     tgt = jnp.where(dead, cache._phys(), N).reshape(-1)
-    ref = cache.ref_count.at[tgt].add(-1)
-    bt = jnp.where(dead, -1, cache.block_table)
-    return cache._replace(ref_count=ref, block_table=bt)
+    cache = _unref_pages(cache, tgt)
+    return cache._replace(block_table=jnp.where(dead, -1, cache.block_table))
 
 
 # ---------------------------------------------------------------------------
@@ -413,11 +448,79 @@ def evict_page(cache: PagedLayerCache, page_idx, enable=None) -> PagedLayerCache
     return cache._replace(block_table=bt)
 
 
+def fork_page(cache: PagedLayerCache, slot, enable=None):
+    """Copy-on-write fork: where ``enable`` and the physical page mapped at
+    logical ``slot`` is SHARED (ref_count > 1), copy its k/v/pos/score (and
+    int8 scales) onto a freshly allocated pool page, remap this row's slot to
+    the copy, and release one reference on the original. Rows whose page is
+    exclusive or unmapped are untouched (fork is the identity there).
+
+    slot: (B,) int32 logical slots. Returns (cache, forked (B,) bool).
+    If the pool is dry the fork silently does not happen (forked stays
+    False) — callers must then skip their mutation of that row, because the
+    un-forked page is another request's live data. Two rows forking the same
+    source page in one call each get their own copy; if every mapper forks
+    away, the source's count reaches 0 and it returns to the free list."""
+    B = cache.batch
+    b = jnp.arange(B)
+    N = cache.pool_pages
+    if enable is None:
+        enable = jnp.ones((B,), bool)
+    phys = cache.block_table[b, slot]                     # (B,)
+    src = jnp.maximum(phys, 0)
+    need = enable & (phys >= 0) & (cache.ref_count[src] > 1)
+    cache, newp, ok = alloc_pages(cache, need)
+    do = need & ok
+    tgt = jnp.where(do, newp, N)                          # OOB drop when masked
+
+    def cp(arr):
+        return arr.at[tgt].set(arr[src])
+
+    cache = cache._replace(
+        k=cp(cache.k), v=cp(cache.v), pos=cp(cache.pos), score=cp(cache.score),
+        k_scale=cp(cache.k_scale) if cache.quantized else None,
+        v_scale=cp(cache.v_scale) if cache.quantized else None,
+        block_table=cache.block_table.at[b, slot].set(
+            jnp.where(do, newp.astype(jnp.int32), phys)),
+    )
+    # release one reference on the source (was > 1, so this never invalidates
+    # unless EVERY mapper forked away in this very call — then it frees)
+    return _unref_pages(cache, jnp.where(do, src, N)), do
+
+
+def _shared_slots(cache: PagedLayerCache) -> jax.Array:
+    """(B, P) bool — logical slots whose physical page is mapped by more
+    than one block-table entry."""
+    return cache.mapped_mask() & (cache.ref_count[cache._phys()] > 1)
+
+
+def _cow_slots_mask(cache: PagedLayerCache, slot_mask) -> PagedLayerCache:
+    """CoW barrier token-level mutation paths run before writing: for each
+    row, fork the FIRST (row, slot) in the (B, P) bool mask whose page is
+    shared. At most one fork per row per call keeps the decode-step graph
+    small; remaining shared slots stay un-forked this round and their
+    mutation is skipped by the callers' exclusive-page gate, then forked on
+    the next step's barrier — lazy CoW, same invariants, budget transiently
+    exceeded at worst. Runs unconditionally (fork_page is the identity when
+    nothing targeted is shared): a data-dependent cond here would re-trace
+    its branches on every eager call, and under jit XLA pays the small fork
+    graph either way."""
+    hit = slot_mask & _shared_slots(cache)                # (B, P)
+    slot = jnp.argmax(hit, axis=-1).astype(jnp.int32)     # first shared slot
+    cache, _ = fork_page(cache, slot, enable=jnp.any(hit, axis=-1))
+    return cache
+
+
 def evict_token(cache: PagedLayerCache, flat_idx, enable=None) -> PagedLayerCache:
     """Invalidate a single token per request addressed by flattened LOGICAL
     (P*page) index. flat_idx: (B,) int32. The physical page stays mapped
     (unstructured fragmentation — the paper's Limitation 1); fully-emptied
-    pages return to the pool at the next rollover via reclaim_empty_pages."""
+    pages return to the pool at the next rollover via reclaim_empty_pages.
+
+    Mutating a SHARED page would corrupt the sharer's view, so the page is
+    CoW-forked first; if the fork is starved (pool dry) the eviction is
+    skipped this round — the budget is transiently exceeded rather than
+    another request's cache corrupted."""
     B = cache.batch
     page = cache.page_size
     N = cache.pool_pages
@@ -425,8 +528,9 @@ def evict_token(cache: PagedLayerCache, flat_idx, enable=None) -> PagedLayerCach
     if enable is None:
         enable = jnp.ones((B,), bool)
     pi, oi = flat_idx // page, flat_idx % page
+    cache, _ = fork_page(cache, pi, enable=enable)
     phys = cache.block_table[b, pi]
-    en = enable & (phys >= 0)
+    en = enable & (phys >= 0) & (cache.ref_count[jnp.maximum(phys, 0)] <= 1)
     tgt = jnp.where(en, jnp.maximum(phys, 0), N)
     return cache._replace(
         pos=cache.pos.at[tgt, oi].set(-1),
@@ -447,20 +551,57 @@ def release_rows(cache: PagedLayerCache, enable) -> PagedLayerCache:
     slot is being handed to a new request) and reset their write heads.
     ``enable``: (B,) bool. Runs inside the unified step for rows that start
     prefilling this step, so the leaving request's pages return to the
-    SHARED free list before the newcomer's first chunk allocates."""
+    SHARED free list before the newcomer's first chunk allocates. Pages the
+    retiring row shared with a still-resident request only lose one
+    reference — their data stays live for the sharer (_unref_pages)."""
     B, P = cache.block_table.shape
     N = cache.pool_pages
     dead = cache.mapped_mask() & enable[:, None]          # (B, P)
     tgt = jnp.where(dead, cache._phys(), N).reshape(-1)
+    cache = _unref_pages(cache, tgt)
     return cache._replace(
-        pos=cache.pos.at[tgt].set(-1),
-        score=cache.score.at[tgt].set(-jnp.inf),
-        ref_count=cache.ref_count.at[tgt].add(-1),
         block_table=jnp.where(dead, -1, cache.block_table),
         cur_page=jnp.where(enable, 0, cache.cur_page),
         # park the head "full" on the unmapped slot: the first append's lazy
         # rollover then allocates the row's first page from the free list
         cur_off=jnp.where(enable, cache.page_size, cache.cur_off),
+    )
+
+
+def adopt_prefix(cache: PagedLayerCache, src, n_pages, enable=None
+                 ) -> PagedLayerCache:
+    """Map the first ``n_pages`` logical slots of row ``src`` into each
+    enabled row's block table, bumping the shared pages' ref counts — the
+    device half of prefix sharing (the host half is the scheduler's radix
+    lookup plus the engine's intactness probe; DESIGN.md §7).
+
+    src: (B,) int32 source batch row (-1 == no sharing); n_pages: (B,) int32.
+    Preconditions the caller (forward_step's reset path) guarantees:
+    the enabled row was just released (empty block table), ``src`` is a
+    live, different row, and its first ``n_pages`` slots are mapped FULL
+    pages holding the contiguous token prefix [0, n_pages*page_size) — the
+    engine probes exactly this before scheduling the adoption.
+
+    The write head parks FULL on the last adopted slot, so the adopting
+    row's first appended token lazily rolls onto a fresh exclusive page:
+    shared pages are never written, only read — and unmapped or CoW-forked
+    by the eviction paths."""
+    B, P = cache.block_table.shape
+    N = cache.pool_pages
+    if enable is None:
+        enable = jnp.ones((B,), bool)
+    en = enable & (src >= 0) & (n_pages > 0)
+    src_bt = cache.block_table[jnp.maximum(src, 0)]       # (B, P) source rows
+    take = en[:, None] & (jnp.arange(P)[None, :] < n_pages[:, None]) & \
+        (src_bt >= 0)
+    bt = jnp.where(take, src_bt, cache.block_table)
+    tgt = jnp.where(take, jnp.maximum(src_bt, 0), N).reshape(-1)
+    return cache._replace(
+        block_table=bt,
+        ref_count=cache.ref_count.at[tgt].add(1),
+        cur_page=jnp.where(en, jnp.maximum(n_pages - 1, 0).astype(jnp.int32),
+                           cache.cur_page),
+        cur_off=jnp.where(en, cache.page_size, cache.cur_off),
     )
 
 
@@ -482,7 +623,11 @@ def rollover_to_free_page(cache: PagedLayerCache, need):
     tpp = c.tokens_per_page().astype(jnp.float32)         # (B, P)
     B, P = tpp.shape
     cur_onehot = jax.nn.one_hot(c.cur_page, P, dtype=bool)
-    cand = jnp.where((tpp > 0) & ~cur_onehot, tpp, jnp.inf)
+    # prefer EXCLUSIVE pages as force-victims: unmapping a shared page frees
+    # a logical slot but no physical page (the sharer keeps it), so it only
+    # helps when no exclusively-owned candidate exists at all
+    shared_penalty = jnp.where(_shared_slots(c), 1e6, 0.0)
+    cand = jnp.where((tpp > 0) & ~cur_onehot, tpp + shared_penalty, jnp.inf)
     victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
     c = evict_page(c, victim, enable=must_force)
     slot2, _ = find_free_slot(c)
@@ -549,11 +694,17 @@ def append_chunk(cache: PagedLayerCache, k_chunk, v_chunk, pos_chunk,
 def evict_token_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
     """Invalidate every token selected by a LOGICAL (B, P, page) bool mask.
     Physical pages stay mapped; fully-emptied pages return to the pool via
-    :func:`reclaim_empty_pages` (the chunk hook calls it after this)."""
+    :func:`reclaim_empty_pages` (the chunk hook calls it after this).
+
+    Slots whose page is SHARED are CoW-forked before the write (the sharer's
+    view must not change); a slot whose fork was starved by a dry pool is
+    skipped — budget transiently exceeded, never cross-request corruption."""
     B, P, page = mask.shape
     N = cache.pool_pages
+    cache = _cow_slots_mask(cache, jnp.any(mask, axis=-1))
     phys = jnp.broadcast_to(cache._phys()[..., None], (B, P, page))
-    en = mask & cache.mapped_mask()[..., None]
+    exclusive = cache.ref_count[cache._phys()] <= 1       # (B, P)
+    en = mask & (cache.mapped_mask() & exclusive)[..., None]
     tgt = jnp.where(en, phys, N).reshape(-1)
     off = jnp.broadcast_to(jnp.arange(page, dtype=jnp.int32), (B, P, page)
                            ).reshape(-1)
@@ -564,19 +715,39 @@ def evict_token_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
 
 
 def evict_pages_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
-    """Evict every LOGICAL page selected by a (B, P) bool mask: invalidate
-    its tokens, return the physical page to the shared free list, unmap the
-    slot. The multi-victim form of :func:`evict_page` — chunk boundaries can
-    owe up to ceil(chunk/page) evictions at once."""
+    """Evict every LOGICAL page selected by a (B, P) bool mask: unmap the
+    slot and release one reference; tokens are invalidated (and the physical
+    page returns to the shared free list) only when no other block table
+    still maps the page. The multi-victim form of :func:`evict_page` — chunk
+    boundaries can owe up to ceil(chunk/page) evictions at once. Evicting a
+    SHARED prefix page is therefore purely local: the evicting request's
+    view shrinks (valid_mask follows mapped_mask), the sharer's view is
+    untouched."""
     N = cache.pool_pages
     en = mask & cache.mapped_mask()                       # (B, P)
     tgt = jnp.where(en, cache._phys(), N).reshape(-1)
-    return cache._replace(
-        pos=cache.pos.at[tgt].set(-1),
-        score=cache.score.at[tgt].set(-jnp.inf),
-        ref_count=cache.ref_count.at[tgt].add(-1),
-        block_table=jnp.where(en, -1, cache.block_table),
-    )
+    cache = _unref_pages(cache, tgt)
+    return cache._replace(block_table=jnp.where(en, -1, cache.block_table))
+
+
+def row_intact_prefix_pages(cache: PagedLayerCache, row) -> jax.Array:
+    """() int32 — length of the leading run of batch row ``row``'s logical
+    slots that hold COMPLETE, position-contiguous prompt pages (slot i holds
+    exactly positions [i*page, (i+1)*page)). This is what makes a prefix
+    adoptable: eviction may have punched holes in the owner's prefix (or a
+    windowed layer shed it), and a partially-written working page never
+    qualifies. Capped at P-1 so an adopting row always keeps an unmapped
+    slot for its own working page. The engine's prefix-sharing probe takes
+    the min of this over every attention layer (transformer.intact_prefix_pages)."""
+    P = cache.num_pages
+    page = cache.page_size
+    bt = cache.block_table[row]                           # (P,)
+    pos = cache.pos[jnp.maximum(bt, 0)]                   # (P, page)
+    want = (jnp.arange(P, dtype=jnp.int32)[:, None] * page +
+            jnp.arange(page, dtype=jnp.int32)[None, :])
+    ok = (bt >= 0) & jnp.all(pos == want, axis=-1)
+    run = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
+    return jnp.minimum(run, P - 1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

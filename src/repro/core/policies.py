@@ -32,6 +32,18 @@ Policies:
                    reproducing the paper's overhead comparison)
 
 All hooks are shape-static and jit/vmap/scan-safe.
+
+Shared pages (prefix sharing, DESIGN.md §7): no policy needs to know about
+``ref_count > 1`` — the primitives they compose enforce the semantics.
+Page-level eviction (``evict_pages_mask``, the paper's Alg.2/Alg.3 path)
+of a shared page is an unmap: this request's budget drops by a page but the
+data stays live for the other mappers, and the physical page is only
+recycled when the last mapper lets go. Token-level eviction
+(``evict_token`` / ``evict_token_mask``, the unstructured baselines)
+copy-on-write-forks a shared page before mutating — at most one fork per
+row per call, so a baseline that targets many shared pages converges over
+a few steps, transiently exceeding budget rather than ever corrupting a
+sharer's view.
 """
 from __future__ import annotations
 

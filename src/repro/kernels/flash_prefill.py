@@ -24,6 +24,13 @@ may already hold ANOTHER request's live tokens. Masking is by token
 position: kv pos <= q pos (+ optional window), so intra-chunk causality
 falls out of write-then-attend; padding queries (q_pos < 0) mask
 everything and emit zeros.
+
+Prefix sharing (DESIGN.md §7): an adopted page is a complete prompt-prefix
+page whose positions are [slot*page, (slot+1)*page) for EVERY request
+mapping it, and an adopting row's first chunk starts at q_pos ==
+shared_tokens — so the kv-pos <= q-pos mask attends shared pages exactly as
+if the row had prefilled them itself. No kernel change; the only retired
+assumption is block-table-row disjointness, which neither kernel relied on.
 """
 from __future__ import annotations
 

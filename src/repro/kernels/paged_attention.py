@@ -19,6 +19,15 @@ page 0 and are masked inside the kernel body via the same scalar ref —
 essential, because a freed physical page may already hold ANOTHER request's
 live tokens.
 
+Prefix sharing (DESIGN.md §7) needs no extra masking here: a physical page
+mapped under several block tables is always a COMPLETE prompt-prefix page
+holding the SAME positions [slot*page, (slot+1)*page) for every mapper (the
+adoption probe enforces it), so the existing mapped / pos >= 0 / pos <=
+cur_pos masks are already correct for shared pages. What sharing does rule
+out is any assumption that bt rows are disjoint — two requests' tables may
+point the same tile, and the kernel must treat each (b, p) step
+independently (it does: all per-step state is derived from bt[b, p]).
+
 Layout: the wrapper (ops.py) permutes the pool to (KV, N_pool, page, hd) so
 each block is a contiguous (page, hd) tile — page_size 16 x head_dim 128 is
 MXU/VPU aligned.

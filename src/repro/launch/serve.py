@@ -33,6 +33,11 @@ def main() -> None:
                     help="max tokens per unified step (default "
                          "max_batch + chunk)")
     ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable CoW prefix sharing across requests")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request this many common leading "
+                         "prompt tokens (exercises prefix sharing)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,12 +55,16 @@ def main() -> None:
                  max_prompt_len=args.prompt_len,
                  max_new_tokens=args.new_tokens,
                  sampling=SamplingParams(greedy=args.greedy),
-                 chunk_size=args.chunk, token_budget=args.token_budget)
+                 chunk_size=args.chunk, token_budget=args.token_budget,
+                 prefix_sharing=not args.no_prefix_sharing)
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=min(args.shared_prefix, args.prompt_len - 1))
     for _ in range(args.requests):
         n = int(rng.integers(args.prompt_len // 2, args.prompt_len))
-        eng.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32))
+        tail = rng.integers(0, cfg.vocab_size, size=max(n - len(shared), 1))
+        eng.submit(np.concatenate([shared, tail]).astype(np.int32))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -65,6 +74,10 @@ def main() -> None:
           f"in {dt:.1f}s ({s.tokens_generated/dt:.1f} tok/s incl. compile)")
     print(f"decode-only throughput: {s.decode_tok_per_s:.1f} tok/s; "
           f"steps={s.steps}; programs={eng.num_compiled_programs()}")
+    if s.shared_prefix_hits:
+        print(f"prefix sharing: {s.shared_prefix_hits} adoptions, "
+              f"{s.shared_prefix_tokens} prompt tokens skipped; "
+              f"pool={eng.pool_stats()}")
     ttfts = [r.ttft for r in done if r.ttft > 0]
     if ttfts:
         print(f"ttft: mean={1e3 * np.mean(ttfts):.1f}ms "

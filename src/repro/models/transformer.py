@@ -31,9 +31,11 @@ from jax import lax
 from repro.configs.base import CacheConfig, LayerSpec, ModelConfig
 from repro.core.paged_cache import (
     PagedLayerCache,
+    adopt_prefix,
     append_chunk,
     chunk_rollover,
     release_rows,
+    row_intact_prefix_pages,
     write_token,
 )
 from repro.core.policies import EvictionPolicy
@@ -358,7 +360,8 @@ def _scan_recurrent(step_fn, state, init_state, h_seq, n_tok, reset_mask):
 
 def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
                 policy: EvictionPolicy, ccfg: CacheConfig, decode_mask,
-                prefill_mask, reset_mask, use_pallas: bool = False):
+                prefill_mask, reset_mask, share_src, share_pages,
+                use_pallas: bool = False):
     """One layer of the unified step. x: (B, T, D); positions: (B, T) int32
     with -1 past each row's ``n_tok``. Returns (x, LayerCaches)."""
     B, T, _ = x.shape
@@ -370,6 +373,10 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
         # rows starting a new request free the previous occupant's pages
         # back to the shared pool before their first chunk allocates
         kvc = release_rows(kvc, reset_mask)
+        # prefix sharing: an adopting row maps the source row's resident
+        # prompt-prefix pages (ref_count bumped, prefill skips those tokens)
+        # before its first non-shared chunk appends — DESIGN.md §7
+        kvc = adopt_prefix(kvc, share_src, share_pages, enable=reset_mask)
         score = policy.write_score(k, v, positions)         # (B, T)
         kvc = append_chunk(kvc, k, v, positions, score, n_tok)
         window = _spec_window(cfg, spec)
@@ -439,7 +446,8 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
 
 def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                  policy: EvictionPolicy, ccfg: CacheConfig, decode_mask=None,
-                 prefill_mask=None, reset_mask=None, ac: Callable = Identity,
+                 prefill_mask=None, reset_mask=None, share_src=None,
+                 share_pages=None, ac: Callable = Identity,
                  use_pallas: bool = False):
     """Unified mixed-batch step: up to T tokens per request in ONE program.
 
@@ -454,6 +462,14 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
     reset_mask  : (B,) bool — rows starting a NEW request this step (the
                   previous occupant's pages are freed, recurrent state and
                   cur_pos reset)
+    share_src   : (B,) int32 — prefix sharing: source batch row whose first
+                  ``share_pages[b]`` prompt pages a resetting row adopts
+                  (ref-count bump, no copy; -1 == no sharing). Only
+                  meaningful on reset rows; the engine probes the source's
+                  intactness (``intact_prefix_pages``) before setting this.
+    share_pages : (B,) int32 — FULL prompt-prefix pages to adopt; the row's
+                  cur_pos starts at ``share_pages * page_size`` and prefill
+                  covers only the remaining tokens
 
     Returns (logits (B, vocab) at each row's last live token, cache).
     Rows with n_tok == 0 return logits of stale garbage — callers mask.
@@ -466,7 +482,12 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
         prefill_mask = (n_tok > 0) & ~decode_mask
     if reset_mask is None:
         reset_mask = jnp.zeros((B,), bool)
-    cur_pos = jnp.where(reset_mask, 0, cache.cur_pos)
+    if share_src is None:
+        share_src = jnp.full((B,), -1, jnp.int32)
+    if share_pages is None:
+        share_pages = jnp.zeros((B,), jnp.int32)
+    cur_pos = jnp.where(reset_mask, share_pages * ccfg.page_size,
+                        cache.cur_pos)
     positions = cur_pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
     positions = jnp.where(jnp.arange(T)[None, :] < n_tok[:, None],
                           positions, -1)
@@ -480,7 +501,7 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
             x, c = _step_layer(slot_params[p], cfg, pat[p], ac(x),
                                slot_caches[p], positions, n_tok, policy,
                                ccfg, decode_mask, prefill_mask, reset_mask,
-                               use_pallas)
+                               share_src, share_pages, use_pallas)
             new_caches.append(c)
         return x, tuple(new_caches)
 
@@ -494,13 +515,39 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
     for i, lp in enumerate(params["tail"]):
         x, c = _step_layer(lp, cfg, pat[i], ac(x), cache.tail[i], positions,
                            n_tok, policy, ccfg, decode_mask, prefill_mask,
-                           reset_mask, use_pallas)
+                           reset_mask, share_src, share_pages, use_pallas)
         tail_caches.append(c)
     last = jnp.maximum(n_tok - 1, 0)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
     logits = lm_logits(params, cfg, x_last)
     return logits, ModelCache(pattern=pattern_caches, tail=tail_caches,
                               cur_pos=cur_pos + n_tok)
+
+
+def intact_prefix_pages(cache: ModelCache, row) -> jax.Array:
+    """() int32 — how many leading FULL prompt pages of batch row ``row``
+    are intact in EVERY attention layer's cache (min over layers; stacked
+    pattern slots vmapped over their repetitions). This is the device half
+    of the prefix-sharing admission probe: the scheduler's radix index says
+    which resident row textually shares a prompt prefix; this says how much
+    of that prefix actually survives eviction. 0 when the model has no
+    attention layers (recurrent state cannot be adopted page-wise)."""
+    runs = []
+    for lc in cache.pattern:
+        if lc.kv is None:
+            continue
+        per_rep = jax.vmap(lambda c: row_intact_prefix_pages(c, row))(lc.kv)
+        runs.append(jnp.min(per_rep))
+    for lc in cache.tail:
+        if lc.kv is None:
+            continue
+        runs.append(row_intact_prefix_pages(lc.kv, row))
+    if not runs:
+        return jnp.zeros((), jnp.int32)
+    out = runs[0]
+    for r in runs[1:]:
+        out = jnp.minimum(out, r)
+    return out
 
 
 # ---------------------------------------------------------------------------

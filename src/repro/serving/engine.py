@@ -39,6 +39,7 @@ from repro.models.transformer import (
     ModelCache,
     forward_step,
     init_decode_caches,
+    intact_prefix_pages,
 )
 from repro.serving.request import Request, RequestStatus, SamplingParams
 from repro.serving.sampler import sample_tokens
@@ -55,6 +56,8 @@ class EngineStats:
     pages_evicted: int = 0
     tokens_evicted: int = 0
     forced_evictions: int = 0
+    shared_prefix_hits: int = 0   # admissions that adopted resident pages
+    shared_prefix_tokens: int = 0  # prompt tokens whose prefill was skipped
     prefill_s: float = 0.0
     decode_s: float = 0.0
 
@@ -68,7 +71,8 @@ class Engine:
                  max_batch: int = 8, max_prompt_len: int = 256,
                  max_new_tokens: int = 128, sampling: SamplingParams | None = None,
                  use_pallas: bool = False, seed: int = 0,
-                 chunk_size: int = 64, token_budget: int | None = None):
+                 chunk_size: int = 64, token_budget: int | None = None,
+                 prefix_sharing: bool = True):
         self.cfg = cfg
         self.params = params
         self.ccfg = cache_cfg
@@ -80,8 +84,17 @@ class Engine:
         self.sampling = sampling or SamplingParams()
         self.use_pallas = use_pallas
         self.chunk_size = min(chunk_size, max_prompt_len)
-        self.scheduler = Scheduler(max_batch, chunk_size=self.chunk_size,
-                                   token_budget=token_budget)
+        # prefix sharing needs every layer's prompt state to live in paged
+        # KV: recurrent mixers (mamba/xLSTM) and cross-attention state can't
+        # be adopted page-wise, so sharing stays off for those archs
+        self._sharing_ok = (prefix_sharing
+                            and all(s.mixer == "attn"
+                                    for s in cfg.layer_pattern())
+                            and not cfg.cross_attention)
+        self.scheduler = Scheduler(
+            max_batch, chunk_size=self.chunk_size, token_budget=token_budget,
+            page_size=cache_cfg.page_size if self._sharing_ok else None,
+            prefix_probe=self._prefix_probe if self._sharing_ok else None)
         self.stats = EngineStats()
         self._key = jax.random.PRNGKey(seed)
         self._next_id = 0
@@ -94,21 +107,29 @@ class Engine:
         self.cur_tokens = np.zeros((max_batch,), np.int32)
 
         self._step_fn = jax.jit(self._step_impl)
+        self._probe_fn = jax.jit(intact_prefix_pages)
 
     # ---------------------------------------------------------------- jitted
     def _step_impl(self, params, tokens, n_tok, decode_mask, prefill_mask,
-                   reset_mask, cache, key):
+                   reset_mask, share_src, share_pages, cache, key):
         """The unified step: append + attend + evict + sample. Compiled once
         per token-dim T — the engine only ever calls it with T == chunk_size
         (mixed/prefill steps) and T == 1 (decode-only steps)."""
         logits, cache = forward_step(
             params, self.cfg, tokens, n_tok, cache, self.policy, self.ccfg,
             decode_mask=decode_mask, prefill_mask=prefill_mask,
-            reset_mask=reset_mask, use_pallas=self.use_pallas)
+            reset_mask=reset_mask, share_src=share_src,
+            share_pages=share_pages, use_pallas=self.use_pallas)
         s = self.sampling
         next_tok = sample_tokens(key, logits, temperature=s.temperature,
                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
         return next_tok, cache
+
+    def _prefix_probe(self, slot: int) -> int:
+        """Device half of prefix-sharing admission (scheduler callback):
+        how many leading full prompt pages of batch row ``slot`` survive
+        intact in every attention layer."""
+        return int(self._probe_fn(self.cache, jnp.int32(slot)))
 
     # ------------------------------------------------------------------- api
     def submit(self, prompt: np.ndarray, *, max_new_tokens: int | None = None,
@@ -146,6 +167,13 @@ class Engine:
         prefill_mask = np.zeros((B,), bool)
         reset_mask = np.zeros((B,), bool)
         reset_mask[plan.reset] = True
+        share_src = np.full((B,), -1, np.int32)
+        share_pages = np.zeros((B,), np.int32)
+        for slot, src, n_pages in plan.adopt:
+            share_src[slot] = src
+            share_pages[slot] = n_pages
+            self.stats.shared_prefix_hits += 1
+            self.stats.shared_prefix_tokens += n_pages * self.ccfg.page_size
         for slot, req in plan.decode:
             tokens[slot, 0] = self.cur_tokens[slot]
             n_tok[slot] = 1
@@ -161,7 +189,8 @@ class Engine:
         next_tok, self.cache = self._step_fn(
             self.params, jnp.asarray(tokens), jnp.asarray(n_tok),
             jnp.asarray(decode_mask), jnp.asarray(prefill_mask),
-            jnp.asarray(reset_mask), self.cache, sk)
+            jnp.asarray(reset_mask), jnp.asarray(share_src),
+            jnp.asarray(share_pages), self.cache, sk)
         next_np = np.asarray(jax.device_get(next_tok))
         dt = time.perf_counter() - t0
         now = time.perf_counter()
@@ -207,14 +236,18 @@ class Engine:
 
     def pool_stats(self) -> dict:
         """Fleet-level page-pool occupancy, aggregated over attention layers:
-        total physical pages, pages on the free list, and utilization —
-        the memory-reclamation signal the benchmarks report."""
-        total = free = 0
+        total physical pages, pages on the free list, utilization, and the
+        prefix-sharing telemetry — pages mapped by more than one block table
+        and the physical pages sharing saves (sum of ref_count - 1)."""
+        total = free = shared = extra = 0
         for lc in list(self.cache.pattern) + list(self.cache.tail):
             if lc.kv is None:
                 continue
-            ref = np.asarray(jax.device_get(lc.kv.ref_count))
+            ref = np.asarray(jax.device_get(lc.kv.ref_count)).reshape(-1)
             total += ref.size
             free += int((ref == 0).sum())
+            shared += int((ref > 1).sum())
+            extra += int((ref[ref > 1] - 1).sum())
         return {"pool_pages": total, "free_pages": free,
-                "utilization": (total - free) / total if total else 0.0}
+                "utilization": (total - free) / total if total else 0.0,
+                "shared_pages": shared, "pages_saved_by_sharing": extra}

@@ -37,6 +37,11 @@ class Request:
     slot: int = -1                          # engine batch slot while active
     prefill_pos: int = 0                    # prompt tokens already consumed
                                             # by chunked prefill
+    share_src: int = -1                     # batch row whose prompt-prefix
+                                            # pages this request adopted at
+                                            # admission (-1 == none)
+    shared_tokens: int = 0                  # prompt tokens covered by the
+                                            # adopted pages (prefill skipped)
     arrival_time: float = field(default_factory=time.perf_counter)
     first_token_time: float = 0.0           # perf_counter at first emission
     prefill_time: float = 0.0               # wall time spent in prefill steps

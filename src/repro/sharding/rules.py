@@ -247,6 +247,8 @@ def step_input_shardings(mesh: Mesh, cfg, batch: int, chunk: int) -> dict:
     paged flash-prefill kernel's tile layouts (DESIGN.md §6):
 
       tokens / n_tok / masks     (B, T) / (B,)   — batch over DP axes
+      share_src / share_pages    (B,)            — prefix-sharing adoption
+                                                   operands, batch over DP
       q chunk  (B, T, H, hd)                     — heads over "model" when
                                                    divisible (same split as
                                                    the decode kernel's query
@@ -266,6 +268,8 @@ def step_input_shardings(mesh: Mesh, cfg, batch: int, chunk: int) -> dict:
         "tokens": P(b, None),
         "n_tok": P(b),
         "mask": P(b),
+        "share_src": P(b),
+        "share_pages": P(b),
         "q": P(b, None, heads, None),
         "q_pos": P(b, None),
         "block_table": P(b, None),

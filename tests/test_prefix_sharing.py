@@ -1,0 +1,416 @@
+"""Copy-on-write prefix sharing (DESIGN.md §7).
+
+Allocator level: adopt/fork/unref semantics — ref_count as a true count,
+the unmap-vs-free split, CoW forks before token mutation, clamped releases.
+Scheduler level: the radix prefix index. Engine level: a second request with
+a >= 50% shared prompt prefix prefills only the non-shared chunks, pool
+occupancy drops vs. the no-sharing baseline, and outputs stay bit-identical
+with sharing on or off (shared pages are immutable; eviction under sharing
+never corrupts a sharer's view).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.core import (
+    adopt_prefix,
+    append_chunk,
+    evict_page,
+    evict_token,
+    evict_token_mask,
+    fork_page,
+    get_policy,
+    init_layer_cache,
+    release_rows,
+    row_intact_prefix_pages,
+)
+from repro.core import paged_cache as pc
+from repro.models import init_model
+from repro.models.attention import paged_attention_ref
+from repro.serving import Engine
+from repro.serving.scheduler import RadixPrefixIndex
+
+from tests.test_pool_invariants import _assert_pool_invariants
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _filled_cache(B=2, P=3, page=4, KV=1, hd=8, rows=(0,), n_tokens=8,
+                  seed=0, pool=None):
+    """Cache where each row in ``rows`` holds ``n_tokens`` deterministic
+    tokens written through the normal chunked-append path."""
+    cache = init_layer_cache(B, P, page, KV, hd, jnp.float32, pool_pages=pool)
+    rng = np.random.RandomState(seed)
+    T = n_tokens
+    k = jnp.asarray(rng.randn(B, T, KV, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, T, KV, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    n_tok = jnp.asarray([T if b in rows else 0 for b in range(B)], jnp.int32)
+    pos = jnp.where(jnp.arange(T)[None] < n_tok[:, None], pos, -1)
+    score = jnp.asarray(rng.rand(B, T), jnp.float32)
+    return append_chunk(cache, k, v, pos, score, n_tok)
+
+
+def _adopt(cache, dst, src, n_pages):
+    """Adopt row ``src``'s first ``n_pages`` into row ``dst``, mirroring the
+    engine's call order: release the (re)starting row first — adopt_prefix
+    requires an EMPTY destination row (init pre-maps each row's first page)."""
+    B = cache.batch
+    enable = jnp.asarray([b == dst for b in range(B)])
+    cache = release_rows(cache, enable)
+    return adopt_prefix(
+        cache,
+        jnp.full((B,), src, jnp.int32),
+        jnp.full((B,), n_pages, jnp.int32),
+        enable=enable)
+
+
+def _dense_attn(q, k, v):
+    """Plain softmax attention oracle. q: (hd,); k, v: (n, hd)."""
+    s = (k @ q) / np.sqrt(q.shape[-1])
+    w = np.exp(s - s.max())
+    w = w / w.sum()
+    return w @ v
+
+
+def _row_dense_ref(cache, row, q, cur_pos):
+    """Dense reference for row's single-token attention from the cache's
+    own live tokens (KV == 1 head)."""
+    pos = np.asarray(cache.pos_view()[row]).reshape(-1)
+    kk = np.asarray(cache.k_view()[row]).reshape(len(pos), -1)
+    vv = np.asarray(cache.v_view()[row]).reshape(len(pos), -1)
+    live = (pos >= 0) & (pos <= cur_pos)
+    return _dense_attn(np.asarray(q), kk[live], vv[live])
+
+
+# ---------------------------------------------------------------------------
+# satellite: ref_count clamping / free refusal
+# ---------------------------------------------------------------------------
+
+def test_unref_clamps_and_free_refuses_shared():
+    cache = _filled_cache(rows=(0,), n_tokens=8)          # row 0: 2 full pages
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    _assert_pool_invariants(cache, "after adopt")
+    phys = np.asarray(cache.block_table)[0, :2]
+    assert (np.asarray(cache.ref_count)[phys] == 2).all()
+
+    # releasing one mapper must NOT recycle the page: data stays live
+    before_pos = np.asarray(cache.pos)[phys]
+    cache2 = release_rows(cache, jnp.asarray([True, False]))
+    assert (np.asarray(cache2.ref_count)[phys] == 1).all()
+    np.testing.assert_array_equal(np.asarray(cache2.pos)[phys], before_pos)
+
+    # double-release the SAME physical page in one batched op: the scatter
+    # counts both, but the count clamps at 0 instead of underflowing
+    tgt = jnp.asarray([int(phys[0])] * 4)
+    cache3 = pc._unref_pages(cache2, tgt)
+    ref3 = np.asarray(cache3.ref_count)
+    assert (ref3 >= 0).all()
+    assert ref3[phys[0]] == 0
+    assert (np.asarray(cache3.pos)[phys[0]] == -1).all()  # freed -> emptied
+
+    # _free_phys on a still-shared page only decrements (refuses to recycle)
+    cache4 = pc._free_phys(cache, jnp.full((2,), int(phys[0]), jnp.int32),
+                           jnp.asarray([True, False]))
+    assert np.asarray(cache4.ref_count)[phys[0]] == 1
+    assert (np.asarray(cache4.pos)[phys[0]] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: CoW fork
+# ---------------------------------------------------------------------------
+
+def test_fork_page_gives_private_copy_and_sharer_view_is_bit_exact():
+    cache = _filled_cache(rows=(0,), n_tokens=8)
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    src_k = np.asarray(cache.k).copy()
+    src_pos = np.asarray(cache.pos).copy()
+    phys0 = int(np.asarray(cache.block_table)[0, 0])
+
+    cache, forked = fork_page(cache, jnp.zeros((2,), jnp.int32),
+                              enable=jnp.asarray([False, True]))
+    forked = np.asarray(forked)
+    assert forked[1] and not forked[0]
+    bt = np.asarray(cache.block_table)
+    newp = int(bt[1, 0])
+    assert newp != phys0, "fork must remap to a fresh physical page"
+    assert int(bt[0, 0]) == phys0, "source mapping untouched"
+    ref = np.asarray(cache.ref_count)
+    assert ref[phys0] == 1 and ref[newp] == 1
+    # the copy is bit-exact at fork time
+    np.testing.assert_array_equal(np.asarray(cache.k)[newp], src_k[phys0])
+    np.testing.assert_array_equal(np.asarray(cache.pos)[newp], src_pos[phys0])
+    _assert_pool_invariants(cache, "after fork")
+
+    # the mutating request diverges; the sharer's view stays bit-exact
+    cache = evict_token(cache, jnp.asarray([0, 1], jnp.int32),
+                        enable=jnp.asarray([False, True]))
+    assert np.asarray(cache.pos)[newp, 1] == -1
+    np.testing.assert_array_equal(np.asarray(cache.pos)[phys0], src_pos[phys0])
+    np.testing.assert_array_equal(np.asarray(cache.k)[phys0], src_k[phys0])
+
+
+def test_evict_token_on_shared_page_forks_automatically():
+    cache = _filled_cache(rows=(0,), n_tokens=8)
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    phys0 = int(np.asarray(cache.block_table)[0, 0])
+    pos_before = np.asarray(cache.pos)[phys0].copy()
+
+    # row 1 evicts flat token 2 (page 0, offset 2) — a shared page
+    cache = evict_token(cache, jnp.full((2,), 2, jnp.int32),
+                        enable=jnp.asarray([False, True]))
+    bt = np.asarray(cache.block_table)
+    assert bt[1, 0] != phys0, "CoW fork must have remapped row 1"
+    np.testing.assert_array_equal(np.asarray(cache.pos)[phys0], pos_before)
+    assert np.asarray(cache.pos)[bt[1, 0], 2] == -1
+    _assert_pool_invariants(cache, "after auto-fork evict")
+
+
+def test_evict_token_mask_forks_lazily_and_never_corrupts():
+    cache = _filled_cache(rows=(0,), n_tokens=8)
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    phys = np.asarray(cache.block_table)[0, :2].copy()
+    pos_before = np.asarray(cache.pos)[phys].copy()
+
+    # row 1 targets tokens on BOTH shared pages at once: one page forks per
+    # call (lazy CoW); un-forked shared targets are skipped, NEVER mutated
+    B, P, page = 2, cache.num_pages, cache.page_size
+    mask = np.zeros((B, P, page), bool)
+    mask[1, 0, 1] = mask[1, 1, 1] = True
+    cache = evict_token_mask(cache, jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(cache.pos)[phys], pos_before)
+    _assert_pool_invariants(cache, "after first masked evict")
+    # second call forks the remaining page; both rows fully diverged
+    cache = evict_token_mask(cache, jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(cache.pos)[phys], pos_before)
+    bt = np.asarray(cache.block_table)
+    assert bt[1, 0] not in phys and bt[1, 1] not in phys
+    assert np.asarray(cache.pos)[bt[1, 0], 1] == -1
+    assert np.asarray(cache.pos)[bt[1, 1], 1] == -1
+    _assert_pool_invariants(cache, "after second masked evict")
+
+
+def test_fork_starvation_skips_mutation_not_corrupts():
+    # pool: 3 pages, all in use after row 1 rolls its own page -> a fork
+    # cannot allocate
+    cache = _filled_cache(B=2, P=2, page=4, rows=(0,), n_tokens=8, pool=3)
+    cache = _adopt(cache, dst=1, src=0, n_pages=1)
+    rng = np.random.RandomState(1)
+    k = jnp.asarray(rng.randn(2, 4, 1, 8), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(4, 8, dtype=jnp.int32), (2, 4))
+    n_tok = jnp.asarray([0, 4], jnp.int32)
+    pos = jnp.where(jnp.arange(4)[None] < n_tok[:, None], pos, -1)
+    cache = append_chunk(cache, k, k, pos, jnp.zeros((2, 4)), n_tok)
+    assert int(cache.num_free()) == 0
+
+    shared = int(np.asarray(cache.block_table)[1, 0])
+    pos_before = np.asarray(cache.pos)[shared].copy()
+    cache = evict_token(cache, jnp.full((2,), 1, jnp.int32),
+                        enable=jnp.asarray([False, True]))
+    # no free page -> no fork -> the shared page must be left untouched
+    np.testing.assert_array_equal(np.asarray(cache.pos)[shared], pos_before)
+    assert np.asarray(cache.ref_count)[shared] == 2
+    _assert_pool_invariants(cache, "after starved fork")
+
+
+# ---------------------------------------------------------------------------
+# tentpole: eviction under sharing never changes the sharer's attention
+# ---------------------------------------------------------------------------
+
+def test_page_eviction_on_shared_page_is_unmap_only():
+    cache = _filled_cache(rows=(0,), n_tokens=8)
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(2, 1, 8), jnp.float32)   # (B, H=1, hd)
+    cur = jnp.full((2,), 7, jnp.int32)
+    out_before = np.asarray(paged_attention_ref(q, cache, cur_pos=cur))
+
+    # row 0 prunes shared page 0 (paper Alg.2/3 path)
+    cache = evict_page(cache, jnp.zeros((2,), jnp.int32),
+                       enable=jnp.asarray([True, False]))
+    _assert_pool_invariants(cache, "after shared-page evict")
+    out_after = np.asarray(paged_attention_ref(q, cache, cur_pos=cur))
+    # the sharer's attention output is bit-exact
+    np.testing.assert_array_equal(out_after[1], out_before[1])
+    # and matches a dense reference over its live tokens
+    np.testing.assert_allclose(
+        out_after[1, 0], _row_dense_ref(cache, 1, np.asarray(q)[1, 0], 7),
+        rtol=1e-5)
+    # the evicting row really lost the page
+    assert np.asarray(cache.block_table)[0, 0] == -1
+    assert int(np.asarray(cache.ref_count)[
+        np.asarray(cache.block_table)[1, 0]]) == 1
+
+
+def test_three_way_sharing_mixed_eviction():
+    cache = _filled_cache(B=3, P=3, rows=(0,), n_tokens=8)
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    cache = _adopt(cache, dst=2, src=0, n_pages=2)
+    phys = np.asarray(cache.block_table)[0, :2]
+    assert (np.asarray(cache.ref_count)[phys] == 3).all()
+    rng = np.random.RandomState(4)
+    q = jnp.asarray(rng.randn(3, 1, 8), jnp.float32)
+    cur = jnp.full((3,), 7, jnp.int32)
+    base = np.asarray(paged_attention_ref(q, cache, cur_pos=cur))
+
+    # row 0 unmaps page 0; row 1 CoW-mutates a token on page 1; row 2 idle
+    cache = evict_page(cache, jnp.zeros((3,), jnp.int32),
+                       enable=jnp.asarray([True, False, False]))
+    cache = evict_token(cache, jnp.full((3,), 5, jnp.int32),
+                        enable=jnp.asarray([False, True, False]))
+    _assert_pool_invariants(cache, "after mixed eviction")
+    out = np.asarray(paged_attention_ref(q, cache, cur_pos=cur))
+    np.testing.assert_array_equal(out[2], base[2])      # untouched sharer
+
+
+def test_adopt_prefix_probe_and_write_head():
+    cache = _filled_cache(B=2, P=3, rows=(0,), n_tokens=10)  # 2 full + 1 part
+    # only COMPLETE position-contiguous pages count, capped at P-1
+    assert int(row_intact_prefix_pages(cache, 0)) == 2
+    assert int(row_intact_prefix_pages(cache, 1)) == 0
+    cache = _adopt(cache, dst=1, src=0, n_pages=2)
+    # head parks FULL on the last adopted slot: first append rolls fresh
+    assert int(np.asarray(cache.cur_page)[1]) == 1
+    assert int(np.asarray(cache.cur_off)[1]) == cache.page_size
+    # punch a hole in row 0's page 0 -> its intact prefix collapses
+    holed = evict_token(cache, jnp.full((2,), 1, jnp.int32),
+                        enable=jnp.asarray([True, False]))
+    assert int(row_intact_prefix_pages(holed, 0)) == 0
+    # ... but row 1 (forked away by CoW? no — row 0 mutated, so IT forked)
+    _assert_pool_invariants(holed, "after hole")
+
+
+# ---------------------------------------------------------------------------
+# scheduler: radix prefix index
+# ---------------------------------------------------------------------------
+
+def test_radix_index_longest_match_and_remove():
+    idx = RadixPrefixIndex(page_size=4)
+    a = np.arange(12, dtype=np.int32)                 # pages [0..3][4..7][8..11]
+    b = np.concatenate([np.arange(8), [99, 98, 97, 96]]).astype(np.int32)
+    idx.insert(0, a)
+    idx.insert(1, b)
+    src, n = idx.lookup(np.arange(12, dtype=np.int32))
+    assert (src, n) == (0, 3)
+    src, n = idx.lookup(b)
+    assert (src, n) == (1, 3)
+    # 2-page common prefix matches both; lowest slot wins
+    src, n = idx.lookup(np.concatenate([np.arange(8), [5, 5, 5, 5]])
+                        .astype(np.int32))
+    assert (src, n) == (0, 2)
+    # exclusion re-routes to the other resident
+    src, n = idx.lookup(np.arange(12, dtype=np.int32), exclude={0})
+    assert (src, n) == (1, 2)
+    # partial pages never participate
+    src, n = idx.lookup(np.arange(3, dtype=np.int32))
+    assert (src, n) == (-1, 0)
+    # removal prunes: no stale match survives
+    idx.remove(0)
+    idx.remove(1)
+    assert idx.lookup(a) == (-1, 0)
+    assert not idx.root.children
+
+
+def test_radix_index_no_hash_collisions_across_dtypes_values():
+    idx = RadixPrefixIndex(page_size=2)
+    idx.insert(0, np.asarray([1, 2, 3, 4], np.int32))
+    # same bytes length, different values -> distinct edges
+    assert idx.lookup(np.asarray([1, 2, 9, 9], np.int32)) == (0, 1)
+    assert idx.lookup(np.asarray([2, 1, 3, 4], np.int32)) == (-1, 0)
+
+
+# ---------------------------------------------------------------------------
+# engine: end-to-end shared-prefix admission (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def shared_setup():
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    prefix = rng.randint(0, cfg.vocab_size, size=40)   # 5 full pages of 8
+    prompts = [np.concatenate([prefix,
+                               rng.randint(0, cfg.vocab_size, size=16)])
+               .astype(np.int32) for _ in range(3)]
+    return cfg, params, prompts
+
+
+def _run_engine(cfg, params, prompts, *, sharing, policy="paged_eviction",
+                budget=64, max_new=8):
+    ccfg = CacheConfig(page_size=8, cache_budget=budget, policy=policy,
+                       dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=4, max_prompt_len=64,
+                 max_new_tokens=max_new, chunk_size=16, prefix_sharing=sharing)
+    for p in prompts:
+        eng.submit(p)
+    peak = 0
+    steps = 0
+    while eng.step() and steps < 400:
+        steps += 1
+        ps = eng.pool_stats()
+        peak = max(peak, ps["pool_pages"] - ps["free_pages"])
+        for lc in list(eng.cache.pattern) + list(eng.cache.tail):
+            if lc.kv is None:
+                continue
+            kv = lc.kv
+            n_layers = kv.ref_count.shape[0] if kv.ref_count.ndim == 2 else 1
+            for r in range(n_layers):
+                one = jax.tree.map(lambda a: a[r], kv) \
+                    if kv.ref_count.ndim == 2 else kv
+                _assert_pool_invariants(one, f"step {steps} rep {r}")
+    outs = {r.request_id: list(r.output_tokens)
+            for r in eng.scheduler.finished}
+    return eng, outs, peak
+
+
+def test_engine_shared_prefix_skips_prefill_and_saves_pages(shared_setup):
+    cfg, params, prompts = shared_setup
+    eng_s, outs_s, peak_s = _run_engine(cfg, params, prompts, sharing=True)
+    eng_n, outs_n, peak_n = _run_engine(cfg, params, prompts, sharing=False)
+
+    # 2 of 3 requests adopt the 40-token prefix (>= 50% of the 56-token
+    # prompt): their prefill runs only the non-shared chunks
+    assert eng_s.stats.shared_prefix_hits == 2
+    assert eng_s.stats.shared_prefix_tokens == 80
+    for r in eng_s.scheduler.finished:
+        if r.share_src >= 0:
+            assert r.shared_tokens == 40
+    assert eng_n.stats.shared_prefix_hits == 0
+
+    # pool pages in use drop vs. the no-sharing baseline
+    assert peak_s < peak_n, (peak_s, peak_n)
+
+    # outputs are bit-identical — shared pages are immutable and eviction
+    # under sharing never leaks across requests
+    assert outs_s == outs_n
+
+
+def test_engine_sharing_with_token_eviction_policy(shared_setup):
+    """streaming_llm evicts tokens every decode step — under sharing those
+    hits land on shared prefix pages and must CoW-fork, never corrupt."""
+    cfg, params, prompts = shared_setup
+    eng_s, outs_s, _ = _run_engine(cfg, params, prompts, sharing=True,
+                                   policy="streaming_llm", budget=64,
+                                   max_new=12)
+    eng_n, outs_n, _ = _run_engine(cfg, params, prompts, sharing=False,
+                                   policy="streaming_llm", budget=64,
+                                   max_new=12)
+    assert outs_s == outs_n
+    assert eng_s.stats.shared_prefix_hits >= 1
+
+
+def test_engine_prefix_sharing_flag():
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=32,
+                       policy="paged_eviction", dtype="float32")
+    eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=2, max_prompt_len=32,
+                 max_new_tokens=4, prefix_sharing=False)
+    assert eng.scheduler.prefix_index is None
+    eng2 = Engine(cfg, params, cache_cfg=ccfg, max_batch=2, max_prompt_len=32,
+                  max_new_tokens=4)
+    assert eng2.scheduler.prefix_index is not None
