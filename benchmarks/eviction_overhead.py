@@ -7,11 +7,20 @@ token-per-step baselines pay argmin-over-cache every step; keydiff
 additionally re-reads all cached keys every step. With the shared page
 pool this path now includes the free-list allocator (rollover pops a page,
 eviction pushes one back); steady-state free-pool headroom is reported
-alongside the timing."""
+alongside the timing.
+
+The eviction-METADATA term is reported as its own column: the cost of
+producing the importance statistics the policy ranks by (the stored-score
+page reduction for PagedEviction, the per-token score gather for the
+unstructured baselines, the full key re-read for keydiff). This is exactly
+the term the fused attention epilogue removes from the hot path
+(DESIGN.md §8): when the Pallas kernels run with ``return_scores``, page
+scores fall out of the attention pass and the metadata column goes to ~0.
+``benchmarks/kernels.py`` lands these rows in BENCH_kernels.json next to
+the fused-epilogue measurement."""
 from __future__ import annotations
 
 import argparse
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +33,21 @@ POLICIES = ["full", "paged_eviction", "streaming_llm", "inverse_key_l2",
             "keydiff"]
 
 
+def _metadata_fn(pol, ccfg):
+    """The policy's metadata source, jitted in isolation. Returns None for
+    policies with no score computation (full: nothing is ranked)."""
+    if pol.name == "full":
+        return None
+    if pol.structured and pol.name == "paged_eviction":
+        # stored-score page reduction — what the fused epilogue replaces
+        return jax.jit(lambda c: c.page_scores())
+    # token policies rank per-token eviction scores every step
+    return jax.jit(lambda c: pol._evict_scores(c, ccfg))
+
+
 def run(B: int = 8, KV: int = 2, hd: int = 64, page: int = 16,
         budget: int = 256, quick: bool = False):
+    """Returns rows (policy, step_us, metadata_us, pool_free)."""
     steps_to_fill = budget + 2 * page
     rows = []
     for polname in POLICIES:
@@ -48,10 +70,15 @@ def run(B: int = 8, KV: int = 2, hd: int = 64, page: int = 16,
                          jnp.full((B,), t, jnp.int32))
         k = jax.random.normal(rng, (B, KV, hd))
         t = jnp.full((B,), steps_to_fill, jnp.int32)
-        us = timeit_call(step, cache, k, k, t, iters=10 if quick else 30)
+        iters = 10 if quick else 30
+        us = timeit_call(step, cache, k, k, t, iters=iters)
+        meta_fn = _metadata_fn(pol, ccfg)
+        meta_us = (timeit_call(meta_fn, cache, iters=iters)
+                   if meta_fn is not None else 0.0)
         free = int(cache.num_free())
-        rows.append((polname, us, free))
+        rows.append((polname, us, meta_us, free))
         print(f"  evict_overhead,{polname},{us:.0f} us/step,"
+              f"metadata={meta_us:.0f} us,"
               f"pool_free={free}/{cache.pool_pages}")
     return rows
 

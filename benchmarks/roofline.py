@@ -2,7 +2,12 @@
 
 Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
 the per-(arch x shape x policy) roofline terms + dominant bottleneck. This
-is the source for EXPERIMENTS.md §Roofline."""
+is the source for EXPERIMENTS.md §Roofline.
+
+Also the before/after gate for kernel perf work: ``--diff OLD_DIR NEW_DIR``
+matches artifacts between two dry-run dirs on (arch, shape, mesh, policy,
+variant) and prints per-term deltas, so a kernel PR can show its roofline
+movement from two artifact snapshots (DESIGN.md §8)."""
 from __future__ import annotations
 
 import argparse
@@ -14,6 +19,10 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
 COLS = ["arch", "shape", "mesh", "policy", "compute_s", "memory_s",
         "collective_s", "dominant", "useful_flops_ratio"]
+
+_HEAD = ("| arch | shape | mesh | policy | variant | compute (s) | "
+         "memory (s) | collective (s) | dominant | useful |\n"
+         "| --- | --- | --- | --- | --- | --- | --- | --- | --- | --- |")
 
 
 def load_rows(art_dir: str = ART_DIR) -> list[dict]:
@@ -34,6 +43,10 @@ def _variant(r: dict) -> str:
     return "+".join(tags) or "-"
 
 
+def _key(r: dict) -> tuple:
+    return (r["arch"], r["shape"], r["mesh"], r["policy"], _variant(r))
+
+
 def fmt_row(r: dict) -> str:
     return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} | "
             f"{_variant(r)} | "
@@ -43,20 +56,64 @@ def fmt_row(r: dict) -> str:
 
 
 def markdown_table(rows: list[dict]) -> str:
-    head = ("| arch | shape | mesh | policy | variant | compute (s) | "
-            "memory (s) | collective (s) | dominant | useful |\n"
-            "| --- | --- | --- | --- | --- | --- | --- | --- | --- | --- |")
     order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
     rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9),
                                        r["mesh"], r["policy"], _variant(r)))
-    return "\n".join([head] + [fmt_row(r) for r in rows])
+    return "\n".join([_HEAD] + [fmt_row(r) for r in rows])
 
 
-def run(quick: bool = False):
-    rows = load_rows()
+def diff_rows(old_rows: list[dict], new_rows: list[dict]) -> list[dict]:
+    """Match artifacts on (arch, shape, mesh, policy, variant); return one
+    record per matched pair with per-term before/after and ratios."""
+    old = {_key(r): r for r in old_rows}
+    out = []
+    for r in new_rows:
+        o = old.get(_key(r))
+        if o is None:
+            continue
+        rec = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+               "policy": r["policy"], "variant": _variant(r)}
+        for term in ("compute_s", "memory_s", "collective_s"):
+            rec[f"{term}_before"] = o[term]
+            rec[f"{term}_after"] = r[term]
+            rec[f"{term}_ratio"] = (r[term] / o[term]) if o[term] else 1.0
+        rec["dominant_before"] = o["dominant"]
+        rec["dominant_after"] = r["dominant"]
+        out.append(rec)
+    return out
+
+
+def diff_table(recs: list[dict]) -> str:
+    head = ("| arch | shape | mesh | policy | variant | compute | memory | "
+            "collective | dominant |\n"
+            "| --- | --- | --- | --- | --- | --- | --- | --- | --- |")
+    lines = [head]
+    for d in recs:
+        cells = []
+        for term in ("compute_s", "memory_s", "collective_s"):
+            cells.append(f"{d[term + '_before']:.2e} -> "
+                         f"{d[term + '_after']:.2e} "
+                         f"({d[term + '_ratio']:.2f}x)")
+        dom = d["dominant_before"]
+        if d["dominant_after"] != dom:
+            dom += f" -> {d['dominant_after']}"
+        lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                     f"{d['policy']} | {d['variant']} | " +
+                     " | ".join(cells) + f" | **{dom}** |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False, art_dir: str = ART_DIR):
+    rows = load_rows(art_dir)
     if not rows:
-        print("  roofline: no dry-run artifacts yet "
-              "(run python -m repro.launch.dryrun --all)")
+        # degrade loudly, not silently: say why the table is empty, print
+        # the (empty) table anyway so downstream parsers see the schema
+        reason = ("artifact dir missing" if not os.path.isdir(art_dir)
+                  else "artifact dir empty")
+        print(f"  roofline: no dry-run artifacts ({reason}: {art_dir}) — "
+              "run `python -m repro.launch.dryrun --all` to generate them")
+        print(_HEAD)
+        print("  roofline,artifacts=0,dominants={}")
         return []
     print(markdown_table(rows))
     doms = {}
@@ -66,9 +123,32 @@ def run(quick: bool = False):
     return rows
 
 
+def run_diff(old_dir: str, new_dir: str) -> list[dict]:
+    old_rows, new_rows = load_rows(old_dir), load_rows(new_dir)
+    if not old_rows or not new_rows:
+        which = old_dir if not old_rows else new_dir
+        print(f"  roofline-diff: no artifacts in {which} — nothing to diff")
+        return []
+    recs = diff_rows(old_rows, new_rows)
+    if not recs:
+        print("  roofline-diff: no matching (arch, shape, mesh, policy, "
+              "variant) rows between the two dirs")
+        return []
+    print(diff_table(recs))
+    print(f"  roofline-diff,matched={len(recs)},"
+          f"unmatched={len(new_rows) - len(recs)}")
+    return recs
+
+
 def main():
-    argparse.ArgumentParser().parse_args()
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--diff", nargs=2, metavar=("OLD_DIR", "NEW_DIR"),
+                    help="diff two dry-run artifact dirs (before/after gate)")
+    args = ap.parse_args()
+    if args.diff:
+        run_diff(*args.diff)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (accuracy, eviction_overhead, latency,
+    from benchmarks import (accuracy, eviction_overhead, kernels, latency,
                             page_size_ablation, paper_claims, roofline,
                             throughput)
 
@@ -48,8 +48,9 @@ def main() -> None:
               f"{r['decoder_itl_max_ms']:.1f} ms itl_max")
 
     _section("eviction bookkeeping overhead (paper Limitation 4)")
-    for pol, us in eviction_overhead.run(quick=quick):
-        print(f"evict_overhead_{pol},{us:.0f},us/step")
+    for pol, us, meta_us, _free in eviction_overhead.run(quick=quick):
+        print(f"evict_overhead_{pol},{us:.0f},us/step "
+              f"(metadata {meta_us:.0f} us)")
 
     _section("accuracy vs budget on long-context recall (paper Fig. 2 proxy)")
     full_acc, results = accuracy.run(quick=quick)
@@ -62,6 +63,11 @@ def main() -> None:
 
     _section("TPU-scale TPOT/throughput claims from dry-runs (paper Fig. 3)")
     paper_claims.run(quick=quick)
+
+    _section("kernel perf pass: split-K / G-fold / fused epilogue (§8)")
+    kres = kernels.run(quick=quick)
+    for name, ok in kres["gates"].items():
+        print(f"kernel_gate_{name},0,{'PASS' if ok else 'FAIL'}")
 
     _section("roofline terms from dry-run artifacts (assignment g)")
     roofline.run(quick=quick)

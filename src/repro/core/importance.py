@@ -64,6 +64,26 @@ def recency_score(positions):
     return positions.astype(jnp.float32)
 
 
+def page_scores_from_norms(kn, vn, pos_pages, mapped):
+    """Paper Alg.1 page scores from the attention kernels' fused norm
+    epilogue (DESIGN.md §8) — the free path for `block_score`.
+
+    kn, vn: (B, KV, P, page) per-token K/V L2 norms (byproduct outputs of
+    the decode/prefill Pallas kernels); pos_pages: (B, P, page) token
+    positions with -1 for empty slots (``cache.pos_view()``); mapped:
+    (B, P) bool (``cache.mapped_mask()``). Returns (B, P) f32; empty or
+    unmapped pages score +inf (never the eviction argmin). Numerically
+    identical to running the standalone ``block_score`` pool pass and
+    gathering through the block table — that pass survives as the parity
+    oracle (tests/test_kernel_perf.py).
+    """
+    tok = jnp.mean(vn, axis=1) / jnp.maximum(jnp.mean(kn, axis=1), _EPS)
+    valid = (pos_pages >= 0) & mapped[:, :, None]           # (B, P, page)
+    cnt = jnp.sum(valid, axis=-1)
+    ssum = jnp.sum(jnp.where(valid, tok, 0.0), axis=-1)
+    return jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), jnp.inf)
+
+
 def block_scores_from_token_scores(token_scores, valid, page_size: int):
     """Paper Alg.1 block mode: S_j = mean_{i in block j} S_i.
 

@@ -139,7 +139,12 @@ class PagedLayerCache(NamedTuple):
 
     def page_scores(self) -> jax.Array:
         """(B, P) f32 — mean token score per page (paper Alg. 1, block mode).
-        Pages with no valid tokens score +inf (never the eviction argmin)."""
+        Pages with no valid tokens score +inf (never the eviction argmin).
+
+        This is the STORED-score reduction (write-time scores). On the
+        Pallas hot paths the attention kernels emit the same reduction as a
+        fused epilogue (DESIGN.md §8) and the policies take it via their
+        ``page_scores=`` argument, skipping this read entirely."""
         valid = self.valid_mask()
         cnt = jnp.sum(valid, axis=-1)
         ssum = jnp.sum(jnp.where(valid, self.score_view(), 0.0), axis=-1)

@@ -21,6 +21,14 @@ Every policy is a stateless, hashable strategy object with three hooks:
                                         after each appended token: page
                                         rollover, eviction, block-table update
 
+Both eviction hooks accept an optional ``page_scores`` (B, P) array — the
+attention kernels' fused score epilogue (DESIGN.md §8). When provided and
+usable, PagedEviction ranks pages by it instead of touching
+``cache.page_scores()``, so eviction metadata costs nothing beyond the
+attention pass the step already ran. Policies that don't rank by page
+score ignore it; windowed chunk eviction falls back to the stored path
+(out-of-window drops invalidate scores computed at attention time).
+
 Policies:
   paged_eviction   the paper: structured block-wise eviction at page-full
                    boundaries using S = ||V||/||K|| page means
@@ -162,24 +170,30 @@ class EvictionPolicy:
         return cache.score_view()
 
     def chunk_prefill_evict(self, cache: PagedLayerCache, cfg: CacheConfig,
-                            active=None, window: int = 0) -> PagedLayerCache:
+                            active=None, window: int = 0,
+                            page_scores=None) -> PagedLayerCache:
         """Compress the pooled cache back to the budget at a chunked-prefill
         boundary (incremental Alg.2). ``active``: (B,) bool — rows that
         consumed a prompt chunk this step; ``window``: the layer's attention
         window (out-of-window tokens are dropped first — they can never be
-        attended again). The whole body runs under ``lax.cond`` so pure-
-        decode steps skip it."""
+        attended again); ``page_scores``: optional (B, P) fused-epilogue
+        scores (see module docstring). The whole body runs under
+        ``lax.cond`` so pure-decode steps skip it."""
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         return jax.lax.cond(
             jnp.any(active),
-            lambda c: self._chunk_evict_body(c, cfg, active, window),
+            lambda c: self._chunk_evict_body(c, cfg, active, window,
+                                             page_scores),
             lambda c: c, cache)
 
-    def _chunk_evict_body(self, cache, cfg: CacheConfig, active, window: int):
+    def _chunk_evict_body(self, cache, cfg: CacheConfig, active, window: int,
+                          page_scores=None):
         """Token-level default: keep the top-C live tokens by eviction score
         (rank via stable argsort — ties keep the older token), then return
-        fully-emptied pages to the shared free list."""
+        fully-emptied pages to the shared free list. Token policies rank
+        per-token, so the fused page_scores don't apply."""
+        del page_scores
         B, P, page = cache.batch, cache.num_pages, cache.page_size
         if window:
             cache = evict_token_mask(cache, _out_of_window(cache, window,
@@ -195,7 +209,7 @@ class EvictionPolicy:
 
     # --- Alg.3: decode bookkeeping -------------------------------------------
     def post_write(self, cache: PagedLayerCache, cfg: CacheConfig,
-                   active=None) -> EvictionOutcome:
+                   active=None, page_scores=None) -> EvictionOutcome:
         raise NotImplementedError
 
     # ------------------------------------------------------------------ misc
@@ -234,15 +248,18 @@ class FullCache(EvictionPolicy):
         return idx, jnp.where(valid, self.prefill_scores(k, v, positions),
                               -jnp.inf)
 
-    def _chunk_evict_body(self, cache, cfg, active, window: int):
+    def _chunk_evict_body(self, cache, cfg, active, window: int,
+                          page_scores=None):
         # no budget: only windowed layers shed (never-again-attendable) tokens
+        del page_scores
         if window:
             cache = evict_token_mask(cache, _out_of_window(cache, window,
                                                            active))
             cache = reclaim_empty_pages(cache)
         return cache
 
-    def post_write(self, cache, cfg, active=None):
+    def post_write(self, cache, cfg, active=None, page_scores=None):
+        del page_scores
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         need = active & (cache.cur_off >= cache.page_size)
@@ -283,14 +300,22 @@ class PagedEviction(EvictionPolicy):
     def prefill_scores(self, k, v, positions):
         return importance.vk_ratio_score(k, v)
 
-    def _chunk_evict_body(self, cache, cfg, active, window: int):
+    def _chunk_evict_body(self, cache, cfg, active, window: int,
+                          page_scores=None):
         """Structured chunk-boundary compression: evict the lowest-mean-score
         COMPLETED pages until at most ``budget_pages`` remain (the partial
         working page rides free, mirroring Alg.3's budget+page slack).
         Because candidacy is by completion and the minimum is always evicted
         first, the surviving page set equals the overall top-K — chunk-size
-        invariant whenever attention inputs are (see DESIGN.md §6)."""
+        invariant whenever attention inputs are (see DESIGN.md §6).
+
+        ``page_scores``: fused-epilogue scores from the attention pass this
+        step already ran (DESIGN.md §8) — used instead of the stored-score
+        reduction when the layer is unwindowed. Windowed layers drop
+        out-of-window tokens first, which changes page means, so they fall
+        back to scoring the post-drop cache."""
         if window:
+            page_scores = None      # stale after the out-of-window drop
             cache = evict_token_mask(cache, _out_of_window(cache, window,
                                                            active))
         full = cache.tokens_per_page() >= cache.page_size   # (B, P) completed
@@ -298,14 +323,15 @@ class PagedEviction(EvictionPolicy):
             B, P = full.shape
             full &= ~jax.nn.one_hot(cache.cur_page, P, dtype=bool)
         m = jnp.maximum(jnp.sum(full, axis=-1) - cfg.budget_pages, 0)  # (B,)
-        cand = jnp.where(full, cache.page_scores(), jnp.inf)
+        pscores = cache.page_scores() if page_scores is None else page_scores
+        cand = jnp.where(full, pscores, jnp.inf)
         order = jnp.argsort(cand, axis=-1)
         ranks = jnp.argsort(order, axis=-1)                 # 0 == worst
         evict = full & (ranks < m[:, None]) & active[:, None]
         cache = evict_pages_mask(cache, evict)
         return reclaim_empty_pages(cache)
 
-    def post_write(self, cache, cfg, active=None):
+    def post_write(self, cache, cfg, active=None, page_scores=None):
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         page_full = active & (cache.cur_off >= cache.page_size)
@@ -313,8 +339,10 @@ class PagedEviction(EvictionPolicy):
         do_evict = page_full & over
         # page score = mean ||V||/||K|| over the page (Alg.1 block mode);
         # only *full* pages compete (the working page is the one just filled,
-        # already full; under-filled pages only exist transiently)
-        pscores = cache.page_scores()                      # (B, P)
+        # already full; under-filled pages only exist transiently). The
+        # fused-epilogue scores, when passed, are this exact reduction
+        # computed for free inside the attention kernel (DESIGN.md §8).
+        pscores = cache.page_scores() if page_scores is None else page_scores
         full_pages = cache.tokens_per_page() >= cache.page_size
         if cfg.protect_recent:
             B, P = pscores.shape
@@ -363,7 +391,8 @@ class StreamingLLM(EvictionPolicy):
         return jnp.where(cache.pos_view() < cfg.num_sink_tokens,
                          jnp.inf, cache.score_view())
 
-    def post_write(self, cache, cfg, active=None):
+    def post_write(self, cache, cfg, active=None, page_scores=None):
+        del page_scores                                     # ranks by recency
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         over = active & (cache.total_valid() > cfg.cache_budget)
@@ -395,7 +424,8 @@ class _UnstructuredTokenPolicy(EvictionPolicy):
         # the working set needs headroom beyond budget/page_size.
         return self._round_slab(cfg, min(total, 2 * cfg.budget_pages + 2))
 
-    def post_write(self, cache, cfg, active=None):
+    def post_write(self, cache, cfg, active=None, page_scores=None):
+        del page_scores                                     # ranks per-token
         if active is None:
             active = jnp.ones((cache.batch,), bool)
         over = active & (cache.total_valid() > cfg.cache_budget)

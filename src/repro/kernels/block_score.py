@@ -1,12 +1,19 @@
 """Pallas TPU kernel for the paper's page scoring (Alg. 1, block mode).
 
 Computes S_j = mean_{i in page j, valid} ( mean_h ||V_i|| / mean_h ||K_i|| )
-directly from the PHYSICAL page pool — the fused replacement for reading
-K/V back to compute importance on the host. Runs once per page-full event
-(every page_size decode steps), which is the paper's amortization argument.
+directly from the PHYSICAL page pool. Since the kernel perf pass
+(DESIGN.md §8) this standalone pass is OFF the hot paths: the decode and
+prefill attention kernels emit the same per-token K/V norms as a byproduct
+epilogue (the tiles are already in VMEM), and
+``importance.page_scores_from_norms`` reduces them to identical page
+scores for free. This kernel survives as the parity oracle
+(tests/test_kernel_perf.py) and the fallback for windowed layers, whose
+fused scores would go stale when out-of-window tokens drop.
 Scoring the pool (not per-request views) means each physical page is
 reduced exactly once no matter how many block tables map it — the wrapper
-(ops.py) gathers pool scores into (B, P) through the block table.
+(ops.py) gathers pool scores into (B, P) through the block table, and
+dequantizes int8 pools first so the oracle matches the epilogue's
+dequantized-tile norms.
 
 Grid: (pool_page,). Each step reduces one (page, KV, hd) K and V tile to a
 single page score. Empty pages score +inf (never the eviction argmin).

@@ -16,6 +16,7 @@ import os
 
 import jax.numpy as jnp
 
+from repro.core.importance import page_scores_from_norms
 from repro.core.paged_cache import PagedLayerCache
 from repro.kernels.block_score import block_score_kernel
 from repro.kernels.flash_prefill import (
@@ -32,11 +33,24 @@ def _pool_layout(arr):
     return jnp.moveaxis(arr, 2, 0)
 
 
+def _epilogue_scores(cache: PagedLayerCache, norms):
+    """(kn, vn) epilogue outputs (B, KV, P, page) -> Alg.1 page scores
+    (B, P); identical to the standalone block_score pass (the oracle)."""
+    kn, vn = norms
+    return page_scores_from_norms(kn, vn, cache.pos_view(),
+                                  cache.mapped_mask())
+
+
 def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
-                    scale: float | None = None):
+                    scale: float | None = None, num_splits: int = 1,
+                    return_scores: bool = False):
     """Decode attention over a pooled paged cache via the Pallas kernel.
 
-    q: (B, H, hd) current-token queries -> (B, H, hd).
+    q: (B, H, hd) current-token queries -> (B, H, hd), or
+    ``(out, page_scores)`` with page_scores (B, P) when ``return_scores``
+    (the fused eviction-score epilogue, DESIGN.md §8). ``num_splits``
+    partitions the logical-page walk into independent split-K chunks
+    (long-context decode latency; DESIGN.md §8).
     """
     B, H, hd = q.shape
     KV = cache.k.shape[2]
@@ -46,46 +60,67 @@ def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
         # (HBM traffic ~0.53x of bf16 — the quantized-KV composition the
         # paper cites as future work)
         from repro.kernels.paged_attention import paged_attention_kernel_int8
-        out = paged_attention_kernel_int8(
+        res = paged_attention_kernel_int8(
             q.reshape(B, KV, G, hd),
             _pool_layout(cache.k), _pool_layout(cache.v),
             jnp.moveaxis(cache.k_scale, 2, 0),
             jnp.moveaxis(cache.v_scale, 2, 0),
             cache.pos, cache.block_table, cur_pos,
-            window=window, scale=scale, interpret=INTERPRET)
-        return out.reshape(B, H, hd)
-    out = paged_attention_kernel(
-        q.reshape(B, KV, G, hd),
-        _pool_layout(cache.k), _pool_layout(cache.v),
-        cache.pos, cache.block_table, cur_pos,
-        window=window, scale=scale, interpret=INTERPRET)
-    return out.reshape(B, H, hd)
+            window=window, scale=scale, interpret=INTERPRET,
+            num_splits=num_splits, return_scores=return_scores)
+    else:
+        res = paged_attention_kernel(
+            q.reshape(B, KV, G, hd),
+            _pool_layout(cache.k), _pool_layout(cache.v),
+            cache.pos, cache.block_table, cur_pos,
+            window=window, scale=scale, interpret=INTERPRET,
+            num_splits=num_splits, return_scores=return_scores)
+    if return_scores:
+        out, norms = res
+        return out.reshape(B, H, hd), _epilogue_scores(cache, norms)
+    return res.reshape(B, H, hd)
 
 
 def paged_prefill_attention(q, cache: PagedLayerCache, *, q_pos,
-                            window: int = 0, scale: float | None = None):
+                            window: int = 0, scale: float | None = None,
+                            return_scores: bool = False):
     """Chunked-prefill attention over a pooled paged cache via the Pallas
-    paged flash-prefill kernel (the unified-step hot path).
+    paged flash-prefill kernel (the unified-step hot path, G-fold fetch).
 
     q: (B, T, H, hd) chunk queries; q_pos: (B, T) int32 (-1 == padding)
-    -> (B, T, H, hd). The chunk's K/V must already be appended to the pool
-    (write-then-attend). int8 caches dequantize pool-side before the call
-    (the chunk kernel is f32-tile only; an int8-native variant is the same
-    follow-up the decode kernel already landed)."""
+    -> (B, T, H, hd), or ``(out, page_scores)`` with page_scores (B, P)
+    when ``return_scores``. The chunk's K/V must already be appended to
+    the pool (write-then-attend). int8 caches dequantize pool-side before
+    the call (the chunk kernel is f32-tile only; an int8-native variant is
+    the same follow-up the decode kernel already landed)."""
     if cache.quantized:
         k_pool, v_pool = cache.k_dequant(), cache.v_dequant()
     else:
         k_pool, v_pool = cache.k, cache.v
-    return paged_flash_prefill_kernel(
+    res = paged_flash_prefill_kernel(
         q, _pool_layout(k_pool), _pool_layout(v_pool),
         cache.pos, cache.block_table, q_pos,
-        window=window, scale=scale, interpret=INTERPRET)
+        window=window, scale=scale, interpret=INTERPRET,
+        return_scores=return_scores)
+    if return_scores:
+        out, norms = res
+        return out, _epilogue_scores(cache, norms)
+    return res
 
 
 def page_scores(cache: PagedLayerCache):
-    """Fused page scoring (paper Alg.1 block mode): (B, P) f32. Each physical
-    page is reduced once on the pool, then gathered per request."""
-    pool = block_score_kernel(cache.k, cache.v, cache.pos,
+    """Standalone page scoring (paper Alg.1 block mode): (B, P) f32. Each
+    physical page is reduced once on the pool, then gathered per request.
+
+    Since the fused epilogue (DESIGN.md §8) this is the slow/oracle path —
+    the hot paths get the same scores as attention byproducts. int8 pools
+    dequantize first so both paths score identical values (the kernels'
+    epilogue norms are taken on dequantized VMEM tiles)."""
+    if cache.quantized:
+        k_pool, v_pool = cache.k_dequant(), cache.v_dequant()
+    else:
+        k_pool, v_pool = cache.k, cache.v
+    pool = block_score_kernel(k_pool, v_pool, cache.pos,
                               interpret=INTERPRET)          # (N,)
     return jnp.where(cache.mapped_mask(),
                      jnp.take(pool, jnp.maximum(cache.block_table, 0)),

@@ -108,6 +108,17 @@ def block_score_ref(k_pages, v_pages, pos):
     return jnp.where(cnt > 0, ssum / jnp.maximum(cnt, 1), jnp.inf)
 
 
+def page_scores_ref(cache):
+    """Per-request Alg.1 page scores from the GATHERED (dequantized) view:
+    (B, P) f32, unmapped/empty pages +inf. The per-request-view oracle for
+    both the standalone pool pass (ops.page_scores) and the fused attention
+    epilogue (importance.page_scores_from_norms); materializes the gather
+    the kernels avoid, so tests — only."""
+    scores = block_score_ref(cache.k_view(), cache.v_view(),
+                             cache.pos_view())               # (B, P)
+    return jnp.where(cache.mapped_mask(), scores, jnp.inf)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0, scale: float | None = None):
     """Causal GQA attention oracle. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
     B, S, H, hd = q.shape

@@ -210,6 +210,53 @@ def paged_attention_chunk_ref(q, cache: PagedLayerCache, *, q_pos,
     return out.reshape(B, T, H, hd)
 
 
+def decode_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
+                     use_pallas: bool = False, num_splits: int = 1,
+                     want_scores: bool = False):
+    """Single-token attention dispatch: Pallas split-K decode kernel or the
+    pure-jnp oracle. q: (B, H, hd). Returns ``(o, page_scores)`` where
+    page_scores is the fused eviction-score epilogue (B, P) when
+    ``want_scores`` and the kernel ran, else None (callers fall back to the
+    stored-score path). ``num_splits`` partitions the page walk
+    (DESIGN.md §8); the oracle ignores it (math is split-invariant)."""
+    if use_pallas:
+        from repro.kernels.ops import paged_attention
+        if want_scores:
+            return paged_attention(q, cache, cur_pos=cur_pos, window=window,
+                                   num_splits=num_splits, return_scores=True)
+        return paged_attention(q, cache, cur_pos=cur_pos, window=window,
+                               num_splits=num_splits), None
+    return paged_attention_ref(q, cache, cur_pos=cur_pos, window=window), None
+
+
+def step_attention(q, cache: PagedLayerCache, *, q_pos, window: int = 0,
+                   use_pallas: bool = False, decode_splits: int = 1,
+                   want_scores: bool = False):
+    """Unified-step attention dispatch (the hot-path switch that used to
+    live inline in ``transformer._step_layer``). q: (B, T, H, hd), q_pos:
+    (B, T). T == 1 routes to the split-K decode kernel — one query row
+    shouldn't pay the chunk kernel's tile shape, and the split-K walk
+    shortens the serial chain; otherwise the G-fold chunked-prefill kernel
+    (each K/V page DMA'd once per KV-head group) or the jnp chunk oracle.
+    Returns ``(o (B, T, H, hd), page_scores (B, P) | None)``."""
+    B, T = q.shape[:2]
+    if use_pallas and T == 1:
+        o, ps = decode_attention(q[:, 0], cache, cur_pos=q_pos[:, 0],
+                                 window=window, use_pallas=True,
+                                 num_splits=decode_splits,
+                                 want_scores=want_scores)
+        return o[:, None], ps
+    if use_pallas:
+        from repro.kernels.ops import paged_prefill_attention
+        if want_scores:
+            return paged_prefill_attention(q, cache, q_pos=q_pos,
+                                           window=window, return_scores=True)
+        return paged_prefill_attention(q, cache, q_pos=q_pos,
+                                       window=window), None
+    return paged_attention_chunk_ref(q, cache, q_pos=q_pos,
+                                     window=window), None
+
+
 def decode_project_qkv(params, cfg: ModelConfig, x, cur_pos):
     """x: (B, D) single token -> q (B,H,hd), k, v (B,KV,hd), RoPE at cur_pos."""
     B, D = x.shape

@@ -361,7 +361,8 @@ def _scan_recurrent(step_fn, state, init_state, h_seq, n_tok, reset_mask):
 def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
                 policy: EvictionPolicy, ccfg: CacheConfig, decode_mask,
                 prefill_mask, reset_mask, share_src, share_pages,
-                use_pallas: bool = False):
+                use_pallas: bool = False, decode_splits: int = 1,
+                fused_scores: bool = False):
     """One layer of the unified step. x: (B, T, D); positions: (B, T) int32
     with -1 past each row's ``n_tok``. Returns (x, LayerCaches)."""
     B, T, _ = x.shape
@@ -380,26 +381,19 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
         score = policy.write_score(k, v, positions)         # (B, T)
         kvc = append_chunk(kvc, k, v, positions, score, n_tok)
         window = _spec_window(cfg, spec)
-        if use_pallas and T == 1:
-            # decode-only instantiation: the single-token decode kernel
-            # fetches each KV page once per KV head (not per q head) and
-            # streams int8 natively — don't pay the chunk kernel's tile
-            # shape for one query row
-            from repro.kernels.ops import paged_attention
-            o = paged_attention(q[:, 0], kvc, cur_pos=positions[:, 0],
-                                window=window)[:, None]
-        elif use_pallas:
-            from repro.kernels.ops import paged_prefill_attention
-            o = paged_prefill_attention(q, kvc, q_pos=positions, window=window)
-        else:
-            o = attn_mod.paged_attention_chunk_ref(q, kvc, q_pos=positions,
-                                                   window=window)
+        o, pscores = attn_mod.step_attention(
+            q, kvc, q_pos=positions, window=window, use_pallas=use_pallas,
+            decode_splits=decode_splits,
+            want_scores=fused_scores and use_pallas)
         # Alg.3 bookkeeping for decode rows, incremental Alg.2 compression
         # for rows that consumed a prompt chunk — disjoint masks, both
-        # skipped via lax.cond when their mask is all-False
-        kvc = policy.post_write(kvc, ccfg, active=decode_mask).cache
+        # skipped via lax.cond when their mask is all-False. When the fused
+        # epilogue ran, both hooks rank pages by the scores the attention
+        # pass already produced (DESIGN.md §8).
+        kvc = policy.post_write(kvc, ccfg, active=decode_mask,
+                                page_scores=pscores).cache
         kvc = policy.chunk_prefill_evict(kvc, ccfg, active=prefill_mask,
-                                         window=window)
+                                         window=window, page_scores=pscores)
         x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"]
         if cache.xattn is not None:
             hx = apply_norm(lp["norm_x"], x)
@@ -448,7 +442,8 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                  policy: EvictionPolicy, ccfg: CacheConfig, decode_mask=None,
                  prefill_mask=None, reset_mask=None, share_src=None,
                  share_pages=None, ac: Callable = Identity,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, decode_splits: int = 1,
+                 fused_scores: bool = False):
     """Unified mixed-batch step: up to T tokens per request in ONE program.
 
     tokens      : (B, T) int32 — row b's live tokens are tokens[b, :n_tok[b]]
@@ -470,6 +465,14 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
     share_pages : (B,) int32 — FULL prompt-prefix pages to adopt; the row's
                   cur_pos starts at ``share_pages * page_size`` and prefill
                   covers only the remaining tokens
+    decode_splits: split-K factor for the Pallas decode kernel's page walk
+                  (long contexts; DESIGN.md §8). Static; 1 == no split.
+    fused_scores: rank PagedEviction's page eviction by the attention
+                  kernels' fused score epilogue instead of the stored-score
+                  reduction. Pallas-only (the flag is ignored on the jnp
+                  path); numerically identical for f32 pools, so defaults
+                  off only to keep pallas-vs-ref comparisons exact on int8
+                  (stored scores predate quantization).
 
     Returns (logits (B, vocab) at each row's last live token, cache).
     Rows with n_tok == 0 return logits of stale garbage — callers mask.
@@ -501,7 +504,8 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
             x, c = _step_layer(slot_params[p], cfg, pat[p], ac(x),
                                slot_caches[p], positions, n_tok, policy,
                                ccfg, decode_mask, prefill_mask, reset_mask,
-                               share_src, share_pages, use_pallas)
+                               share_src, share_pages, use_pallas,
+                               decode_splits, fused_scores)
             new_caches.append(c)
         return x, tuple(new_caches)
 
@@ -515,7 +519,8 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
     for i, lp in enumerate(params["tail"]):
         x, c = _step_layer(lp, cfg, pat[i], ac(x), cache.tail[i], positions,
                            n_tok, policy, ccfg, decode_mask, prefill_mask,
-                           reset_mask, share_src, share_pages, use_pallas)
+                           reset_mask, share_src, share_pages, use_pallas,
+                           decode_splits, fused_scores)
         tail_caches.append(c)
     last = jnp.maximum(n_tok - 1, 0)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
@@ -648,7 +653,8 @@ def forward_prefill(params, cfg: ModelConfig, tokens, policy: EvictionPolicy,
 
 def _decode_layer(lp, cfg, spec, x, cache: LayerCaches, cur_pos,
                   policy: EvictionPolicy, ccfg: CacheConfig, active,
-                  use_pallas: bool = False):
+                  use_pallas: bool = False, decode_splits: int = 1,
+                  fused_scores: bool = False):
     """One layer, one token. x: (B, D). Returns (x, LayerCaches)."""
     h = apply_norm(lp["norm1"], x)
     if spec.mixer == "attn":
@@ -662,13 +668,12 @@ def _decode_layer(lp, cfg, spec, x, cache: LayerCaches, cur_pos,
         kvc = chunk_rollover(kvc, active & (kvc.cur_off >= kvc.page_size))
         kvc = write_token(kvc, k, v, cur_pos, score, active=active)
         window = _spec_window(cfg, spec)
-        if use_pallas:
-            from repro.kernels.ops import paged_attention
-            o = paged_attention(q, kvc, cur_pos=cur_pos, window=window)
-        else:
-            o = attn_mod.paged_attention_ref(q, kvc, cur_pos=cur_pos,
-                                             window=window)
-        outcome = policy.post_write(kvc, ccfg, active=active)
+        o, pscores = attn_mod.decode_attention(
+            q, kvc, cur_pos=cur_pos, window=window, use_pallas=use_pallas,
+            num_splits=decode_splits,
+            want_scores=fused_scores and use_pallas)
+        outcome = policy.post_write(kvc, ccfg, active=active,
+                                    page_scores=pscores)
         kvc = outcome.cache
         B = x.shape[0]
         o = o.reshape(B, -1) @ lp["attn"]["wo"]
@@ -702,8 +707,10 @@ def _decode_layer(lp, cfg, spec, x, cache: LayerCaches, cur_pos,
 
 def decode_step(params, cfg: ModelConfig, tokens, cache: ModelCache,
                 policy: EvictionPolicy, ccfg: CacheConfig, active=None,
-                use_pallas: bool = False, ac: Callable = Identity):
-    """One decode step. tokens: (B,) [or (B, K) audio] -> (logits, cache)."""
+                use_pallas: bool = False, ac: Callable = Identity,
+                decode_splits: int = 1, fused_scores: bool = False):
+    """One decode step. tokens: (B,) [or (B, K) audio] -> (logits, cache).
+    ``decode_splits`` / ``fused_scores``: see :func:`forward_step`."""
     if cfg.num_codebooks > 1:
         # tokens: (B, K); embed: (K, V, D)
         per_cb = jax.vmap(lambda emb, tok: jnp.take(emb, tok, axis=0),
@@ -724,7 +731,8 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: ModelCache,
         for p in range(P):
             x, c = _decode_layer(slot_params[p], cfg, pat[p], ac(x),
                                  slot_caches[p], cur_pos, policy, ccfg,
-                                 active, use_pallas)
+                                 active, use_pallas, decode_splits,
+                                 fused_scores)
             new_caches.append(c)
         return x, tuple(new_caches)
 
@@ -737,7 +745,8 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: ModelCache,
     tail_caches = []
     for i, lp in enumerate(params["tail"]):
         x, c = _decode_layer(lp, cfg, pat[i], ac(x), cache.tail[i], cur_pos,
-                             policy, ccfg, active, use_pallas)
+                             policy, ccfg, active, use_pallas, decode_splits,
+                             fused_scores)
         tail_caches.append(c)
     logits = lm_logits(params, cfg, x)
     new_pos = jnp.where(active, cur_pos + 1, cur_pos)

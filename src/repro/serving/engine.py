@@ -72,7 +72,8 @@ class Engine:
                  max_new_tokens: int = 128, sampling: SamplingParams | None = None,
                  use_pallas: bool = False, seed: int = 0,
                  chunk_size: int = 64, token_budget: int | None = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, decode_splits: int = 1,
+                 fused_scores: bool | None = None):
         self.cfg = cfg
         self.params = params
         self.ccfg = cache_cfg
@@ -83,6 +84,12 @@ class Engine:
         self.total_len = max_prompt_len + max_new_tokens
         self.sampling = sampling or SamplingParams()
         self.use_pallas = use_pallas
+        # split-K decode (DESIGN.md §8): partition the page walk of the
+        # Pallas decode kernel; 1 == off. Fused eviction scores default to
+        # riding along whenever the Pallas kernels run (they emit the score
+        # epilogue for free); pass False to force the stored-score path.
+        self.decode_splits = decode_splits
+        self.fused_scores = use_pallas if fused_scores is None else fused_scores
         self.chunk_size = min(chunk_size, max_prompt_len)
         # prefix sharing needs every layer's prompt state to live in paged
         # KV: recurrent mixers (mamba/xLSTM) and cross-attention state can't
@@ -119,7 +126,8 @@ class Engine:
             params, self.cfg, tokens, n_tok, cache, self.policy, self.ccfg,
             decode_mask=decode_mask, prefill_mask=prefill_mask,
             reset_mask=reset_mask, share_src=share_src,
-            share_pages=share_pages, use_pallas=self.use_pallas)
+            share_pages=share_pages, use_pallas=self.use_pallas,
+            decode_splits=self.decode_splits, fused_scores=self.fused_scores)
         s = self.sampling
         next_tok = sample_tokens(key, logits, temperature=s.temperature,
                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)

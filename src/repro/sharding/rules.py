@@ -256,6 +256,18 @@ def step_input_shardings(mesh: Mesh, cfg, batch: int, chunk: int) -> dict:
       q_pos    (B, T)                            — batch over DP
       block_table (B, P)                         — batch only (scalar
                                                    prefetch reads it whole)
+      page_scores (B, P)                         — fused-epilogue eviction
+                                                   scores (kernel byproduct
+                                                   consumed host-of-kernel by
+                                                   the policies), batch only
+      decode_partials (B, KV, S, G, hd)          — split-K un-normalized
+                                                   (acc/m/l) flash partials;
+                                                   the combine reduction is
+                                                   per-(b, kv) so kv heads
+                                                   split over "model" when
+                                                   divisible
+      epilogue_norms (B, KV, P, page)            — kn/vn byproduct outputs,
+                                                   same kv-head split
 
     The pool-side operands (k/v pool, pos) keep the cache rules — the chunk
     kernel streams the same physical tiles the decode kernel does, so no
@@ -264,6 +276,7 @@ def step_input_shardings(mesh: Mesh, cfg, batch: int, chunk: int) -> dict:
     msz = _ma_size(mesh)
     MA = model_axes(mesh)
     heads = MA if (msz > 1 and cfg.num_heads % msz == 0) else None
+    kv = MA if (msz > 1 and cfg.num_kv_heads % msz == 0) else None
     return {
         "tokens": P(b, None),
         "n_tok": P(b),
@@ -273,6 +286,9 @@ def step_input_shardings(mesh: Mesh, cfg, batch: int, chunk: int) -> dict:
         "q": P(b, None, heads, None),
         "q_pos": P(b, None),
         "block_table": P(b, None),
+        "page_scores": P(b, None),
+        "decode_partials": P(b, kv, None, None, None),
+        "epilogue_norms": P(b, kv, None, None),
     }
 
 

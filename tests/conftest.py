@@ -7,11 +7,23 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, CacheConfig
 
 
+KERNEL_MODULES = {
+    "test_kernels", "test_block_table_kernel", "test_chunked_prefill",
+    "test_prefix_sharing", "test_kernel_perf",
+}
+
+
 def pytest_collection_modifyitems(config, items):
-    """Everything not explicitly marked slow is the fast (CI) tier."""
+    """Everything not explicitly marked slow is the fast (CI) tier. Kernel
+    parity suites additionally get the ``kernels`` marker (applied here by
+    module name so the suites themselves stay byte-identical across kernel
+    PRs — they are the fixed contract the kernels must keep passing)."""
     for item in items:
         if "slow" not in item.keywords:
             item.add_marker(pytest.mark.fast)
+        if item.module is not None and \
+                item.module.__name__ in KERNEL_MODULES:
+            item.add_marker(pytest.mark.kernels)
 
 
 @pytest.fixture(scope="session")

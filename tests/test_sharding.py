@@ -78,13 +78,20 @@ def test_step_input_specs_divisible(mesh):
         cfg = ASSIGNED_ARCHS[arch]
         B, T = DECODE_32K.global_batch, 256
         sh = rules.step_input_shardings(mesh, cfg, B, T)
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        G = cfg.num_heads // KV
         shapes = {
             "tokens": jnp.zeros((B, T), jnp.int32),
             "n_tok": jnp.zeros((B,), jnp.int32),
             "mask": jnp.zeros((B,), bool),
-            "q": jnp.zeros((B, T, cfg.num_heads, cfg.resolved_head_dim)),
+            "share_src": jnp.zeros((B,), jnp.int32),
+            "share_pages": jnp.zeros((B,), jnp.int32),
+            "q": jnp.zeros((B, T, cfg.num_heads, hd)),
             "q_pos": jnp.zeros((B, T), jnp.int32),
             "block_table": jnp.zeros((B, 64), jnp.int32),
+            "page_scores": jnp.zeros((B, 64), jnp.float32),
+            "decode_partials": jnp.zeros((B, KV, 8, G, hd), jnp.float32),
+            "epilogue_norms": jnp.zeros((B, KV, 64, 16), jnp.float32),
         }
         for name, spec in sh.items():
             _check_divisible([jax.eval_shape(lambda: shapes[name])],
@@ -94,6 +101,10 @@ def test_step_input_specs_divisible(mesh):
                            if a in mesh.shape]))
         if cfg.num_heads % msz == 0 and msz > 1:
             assert sh["q"][2] is not None, arch
+        # split-K partials / epilogue norms split kv heads iff divisible
+        if msz > 1 and KV % msz == 0:
+            assert sh["decode_partials"][1] is not None, arch
+            assert sh["epilogue_norms"][1] is not None, arch
 
 
 def test_batch_axes_fallbacks():
