@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.configs import ARCHS, CacheConfig, ModelConfig
 from repro.models import init_model
+from repro.obs import MetricsRegistry
 from repro.serving import Engine, SamplingParams
 
 _PARAM_CACHE: dict = {}
@@ -36,6 +37,22 @@ class ServeResult:
     pages_evicted: int
     steps: int
     pool_utilization: float = 0.0  # mapped / total physical pool pages
+    # p50/p90/p99 (ms) from the engine metrics registry, measured AFTER the
+    # warmup/compile window: {"itl_ms": {...}}
+    percentiles: dict | None = None
+
+
+def latency_percentiles(eng, names=("itl", "tpot")) -> dict:
+    """Pull p50/p90/p99 (in ms) for the given engine latency histograms out
+    of the metrics registry snapshot (DESIGN.md §9 benchmark consumption)."""
+    snap = eng.metrics_snapshot()
+    out = {}
+    for name in names:
+        h = snap.get(f"engine.{name}_s")
+        if h and h.get("count"):
+            out[f"{name}_ms"] = {q: h[q] * 1e3 if h[q] is not None else None
+                                 for q in ("p50", "p90", "p99")}
+    return out
 
 
 def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
@@ -66,6 +83,9 @@ def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
     eng.stats.decode_tokens = 0
     eng.stats.steps = 0
     eng.stats.decode_steps = 0
+    # fresh registry so histogram percentiles exclude the compile window
+    # (the engine reads self.obs.registry at every use site)
+    eng.obs.registry = MetricsRegistry()
     eng.run()
     s = eng.stats
     tpot = (s.decode_s / max(s.decode_steps, 1)) * 1000.0
@@ -73,7 +93,30 @@ def run_serving_bench(arch: str, *, policy: str, budget: int, page: int,
                        throughput_tok_s=s.decode_tok_per_s, tpot_ms=tpot,
                        total_tokens=s.tokens_generated,
                        pages_evicted=s.pages_evicted, steps=s.steps,
-                       pool_utilization=eng.pool_stats()["utilization"])
+                       pool_utilization=eng.pool_stats()["utilization"],
+                       # itl only: the per-request tpot histogram averages
+                       # over decode steps that span the compile window for
+                       # requests admitted before warmup
+                       percentiles=latency_percentiles(eng, names=("itl",)))
+
+
+def merge_json(path, key, value) -> None:
+    """Set ``key`` in the JSON object at ``path``, preserving other keys —
+    latency.py and throughput.py both land sections in BENCH_latency.json
+    and must not clobber each other."""
+    import json
+    import pathlib
+    path = pathlib.Path(path)
+    out = {}
+    if path.exists():
+        try:
+            out = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            out = {}
+    if not isinstance(out, dict):
+        out = {}
+    out[key] = value
+    path.write_text(json.dumps(out, indent=2) + "\n")
 
 
 def timeit_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:

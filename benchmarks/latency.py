@@ -22,7 +22,7 @@ from dataclasses import replace
 import jax
 import numpy as np
 
-from benchmarks.common import reduced_model, run_serving_bench
+from benchmarks.common import merge_json, reduced_model, run_serving_bench
 from repro.configs import PAPER_ARCHS, CacheConfig
 from repro.models import init_model
 from repro.serving import Engine, SamplingParams
@@ -173,18 +173,23 @@ def run(budget: int = 64, page: int = 8, quick: bool = False):
                                   new_tokens=8 if quick else 32,
                                   model=(cfg, params))
             rows.append((tag, pol, r))
-            print(f"  tpot,{tag},{pol},{r.tpot_ms:.2f} ms/token")
+            pct = (r.percentiles or {}).get("itl_ms") or {}
+            print(f"  tpot,{tag},{pol},{r.tpot_ms:.2f} ms/token"
+                  + (f" itl p50={pct['p50']:.2f} p99={pct['p99']:.2f}"
+                     if pct.get("p50") is not None else ""))
     # latency results land in a committed artifact on EVERY run — the TPOT
-    # ladder used to live only in stdout and silently went stale
-    out = {
-        "setup": {"budget": budget, "page": page, "quick": quick,
-                  "sizes": {t: a for t, (a, _) in SIZES.items()}},
-        "tpot_ms": [{"size": tag, "policy": pol, "tpot_ms": r.tpot_ms,
-                     "throughput_tok_s": r.throughput_tok_s,
-                     "pool_utilization": r.pool_utilization}
-                    for tag, pol, r in rows],
-    }
-    BENCH_LATENCY_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    # ladder used to live only in stdout and silently went stale. The
+    # p50/p90/p99 columns come from the engine metrics registry (post-warmup
+    # window), so the summary carries tail latency, not just means.
+    merge_json(BENCH_LATENCY_JSON, "setup",
+               {"budget": budget, "page": page, "quick": quick,
+                "sizes": {t: a for t, (a, _) in SIZES.items()}})
+    merge_json(BENCH_LATENCY_JSON, "tpot_ms",
+               [{"size": tag, "policy": pol, "tpot_ms": r.tpot_ms,
+                 "throughput_tok_s": r.throughput_tok_s,
+                 "pool_utilization": r.pool_utilization,
+                 "percentiles": r.percentiles}
+                for tag, pol, r in rows])
     print(f"wrote {BENCH_LATENCY_JSON}")
     return rows
 

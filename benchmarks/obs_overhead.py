@@ -1,0 +1,122 @@
+"""Telemetry overhead gate: instrumented vs bare decode TPOT (DESIGN.md §9).
+
+The obs subsystem promises near-zero hot-path cost: the device stats
+vector is pure jnp accumulation inside the already-jitted step (no host
+callbacks), and the host side is one small device_get + a handful of dict
+and histogram updates per ENGINE STEP (not per token). This benchmark
+proves it: two engines over identical workloads — one fully instrumented
+(metrics registry + JSONL trace), one with ``ObsConfig(metrics=False)``
+(stats leaves are None, the cache pytree matches the pre-telemetry
+engine) — measured in interleaved A/B pairs with alternating order so
+machine drift cancels. The gate is the MEDIAN of per-pair TPOT ratios
+(median-of-ratios is robust to a single noisy rep) and must stay at or
+under ``GATE_RATIO``.
+
+Writes BENCH_obs.json; ``main()`` exits non-zero when the gate fails, so
+the CI step is the assertion, not a log line.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import statistics
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import reduced_model
+from repro.configs import CacheConfig
+from repro.obs import ObsConfig
+from repro.serving import Engine, SamplingParams
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_obs.json"
+GATE_RATIO = 1.02          # instrumented TPOT may cost at most 2%
+
+
+def _make(cfg, params, obs, *, budget=32, page=8, max_batch=4,
+          prompt_len=48, new_tokens=48, seed=0):
+    ccfg = CacheConfig(page_size=page, cache_budget=budget,
+                      policy="paged_eviction", dtype="float32")
+    return Engine(cfg, params, cache_cfg=ccfg, max_batch=max_batch,
+                  max_prompt_len=prompt_len, max_new_tokens=new_tokens,
+                  sampling=SamplingParams(greedy=True), seed=seed,
+                  obs=obs)
+
+
+def _one_rep(eng, prompts) -> float:
+    """Run one workload on a warmed engine; return decode TPOT (ms) for
+    just this rep (delta against the engine's running stats)."""
+    s = eng.stats
+    t0, n0 = s.decode_s, s.decode_steps
+    for p in prompts:
+        eng.submit(p.copy())
+    eng.run()
+    return (s.decode_s - t0) / max(s.decode_steps - n0, 1) * 1e3
+
+
+def run(quick: bool = False, reps: int | None = None,
+        new_tokens: int | None = None) -> dict:
+    reps = reps if reps is not None else (5 if quick else 9)
+    new_tokens = new_tokens if new_tokens is not None else \
+        (24 if quick else 48)
+    cfg, params = reduced_model("qwen2.5-3b")
+    trace_path = os.path.join(tempfile.mkdtemp(prefix="obs_bench_"),
+                              "trace.jsonl")
+    on = _make(cfg, params, ObsConfig(trace_path=trace_path),
+               new_tokens=new_tokens)
+    off = _make(cfg, params, ObsConfig(metrics=False),
+                new_tokens=new_tokens)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(24, 48))).astype(np.int32)
+               for _ in range(4)]
+    # warm both engines (compile both unified-step shapes) outside the
+    # measurement window
+    for eng in (on, off):
+        _one_rep(eng, prompts)
+    pairs = []
+    for i in range(reps):
+        # alternate order so slow drift hits both sides equally
+        first, second = (on, off) if i % 2 == 0 else (off, on)
+        a = _one_rep(first, prompts)
+        b = _one_rep(second, prompts)
+        t_on, t_off = (a, b) if first is on else (b, a)
+        pairs.append({"rep": i, "tpot_on_ms": t_on, "tpot_off_ms": t_off,
+                      "ratio": t_on / t_off})
+    on.close()
+    off.close()
+    ratios = [p["ratio"] for p in pairs]
+    med = statistics.median(ratios)
+    out = {
+        "setup": {"arch": "qwen2.5-3b (reduced)", "policy": "paged_eviction",
+                  "reps": reps, "new_tokens": new_tokens,
+                  "requests_per_rep": len(prompts),
+                  "gate_ratio": GATE_RATIO},
+        "pairs": pairs,
+        "median_ratio": med,
+        "overhead_pct": (med - 1.0) * 100.0,
+        "trace_events": on.obs.writer.events_written,
+        "gate_pass": med <= GATE_RATIO,
+    }
+    BENCH_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+    verdict = "PASS" if out["gate_pass"] else "FAIL"
+    print(f"  obs overhead: median tpot ratio {med:.4f} "
+          f"({out['overhead_pct']:+.2f}%), gate {verdict} (<= {GATE_RATIO})")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args()
+    out = run(quick=args.quick, reps=args.reps)
+    return 0 if out["gate_pass"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,8 +24,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (accuracy, eviction_overhead, kernels, latency,
-                            page_size_ablation, paper_claims, roofline,
-                            throughput)
+                            obs_overhead, page_size_ablation, paper_claims,
+                            roofline, throughput)
 
     t0 = time.perf_counter()
     _section("throughput vs budget (paper Fig. 3a-c)")
@@ -68,6 +68,17 @@ def main() -> None:
     kres = kernels.run(quick=quick)
     for name, ok in kres["gates"].items():
         print(f"kernel_gate_{name},0,{'PASS' if ok else 'FAIL'}")
+
+    _section("telemetry overhead gate: instrumented vs bare TPOT (§9)")
+    ores = obs_overhead.run(quick=quick)
+    print(f"obs_overhead_gate,{ores['overhead_pct'] * 100:.0f},"
+          f"{'PASS' if ores['gate_pass'] else 'FAIL'} "
+          f"(median ratio {ores['median_ratio']:.4f} <= "
+          f"{obs_overhead.GATE_RATIO}; middle column = basis points)")
+    if not ores["gate_pass"]:
+        raise SystemExit("obs overhead gate FAILED: telemetry costs more "
+                         f"than {(obs_overhead.GATE_RATIO - 1) * 100:.0f}% "
+                         "TPOT — see BENCH_obs.json")
 
     _section("roofline terms from dry-run artifacts (assignment g)")
     roofline.run(quick=quick)

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import run_serving_bench
+from benchmarks.common import merge_json, run_serving_bench
+from benchmarks.latency import BENCH_LATENCY_JSON
 
 POLICIES = ["full", "paged_eviction", "streaming_llm", "inverse_key_l2",
             "keydiff"]
@@ -30,6 +31,12 @@ def run(arch: str = "llama-3.2-1b", budgets=(32, 64, 128), page: int = 8,
             print(f"  throughput,{arch},{pol},budget={budget},"
                   f"{r.throughput_tok_s:.1f} tok/s,tpot={r.tpot_ms:.1f}ms,"
                   f"pool_util={r.pool_utilization:.2f}")
+    # merged (not clobbered) into the shared latency artifact: the decode
+    # ITL/TPOT p50/p90/p99 per policy/budget from the metrics registry
+    merge_json(BENCH_LATENCY_JSON, "throughput_percentiles",
+               [{"arch": arch, "policy": r.policy, "budget": r.budget,
+                 "throughput_tok_s": r.throughput_tok_s,
+                 "percentiles": r.percentiles} for r in rows])
     return rows
 
 

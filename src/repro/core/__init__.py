@@ -33,7 +33,7 @@ from repro.core.policies import (
 )
 from repro.core.prefill import compress_and_page
 from repro.core.decode import decode_append
-from repro.core import importance
+from repro.core import devstats, importance
 
 __all__ = [
     "PagedLayerCache", "adopt_prefix", "alloc_pages", "append_chunk",
@@ -43,5 +43,6 @@ __all__ = [
     "find_free_slot", "reclaim_empty_pages", "start_new_page",
     "to_contiguous", "POLICIES", "EvictionOutcome", "EvictionPolicy",
     "FullCache", "InverseKeyL2", "KeyDiff", "PagedEviction", "StreamingLLM",
-    "get_policy", "compress_and_page", "decode_append", "importance",
+    "get_policy", "compress_and_page", "decode_append", "devstats",
+    "importance",
 ]

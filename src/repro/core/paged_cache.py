@@ -57,6 +57,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import devstats
+
 
 class PagedLayerCache(NamedTuple):
     k: jax.Array           # (N, page, KV, hd) — bf16/f32, or int8 (quantized)
@@ -71,6 +73,10 @@ class PagedLayerCache(NamedTuple):
     # as future work): absmax scale per (token, head); None when not quantized
     k_scale: jax.Array | None = None   # (N, page, KV) f32
     v_scale: jax.Array | None = None   # (N, page, KV) f32
+    # telemetry (repro.core.devstats / DESIGN.md §9): per-step event counts
+    # accumulated by the pool mutators as pure jnp scatter-adds. None == off
+    # (a static Python value, so the disabled path traces unchanged HLO).
+    stats: jax.Array | None = None     # (devstats.NSTATS,) int32
 
     # ----------------------------------------------------------- derived
     @property
@@ -186,12 +192,17 @@ def quantize_absmax(x, axis: int = -1):
 
 def init_layer_cache(batch: int, num_pages: int, page_size: int,
                      num_kv_heads: int, head_dim: int, dtype,
-                     pool_pages: int | None = None) -> PagedLayerCache:
+                     pool_pages: int | None = None,
+                     track_stats: bool = False) -> PagedLayerCache:
     """Empty cache: pool of ``pool_pages`` (default batch*num_pages) physical
     pages, per-request block tables of ``num_pages`` logical slots.
 
     Logical slot 0 of request b is pre-mapped to physical page b so the write
-    head always points at a mapped page (the working page)."""
+    head always points at a mapped page (the working page).
+
+    ``track_stats`` attaches the (devstats.NSTATS,) int32 telemetry vector;
+    the pool mutators then accumulate event counts into it (DESIGN.md §9).
+    Off by default: raw-core callers see the exact pre-telemetry pytree."""
     N = pool_pages if pool_pages is not None else batch * num_pages
     assert N >= batch, (N, batch)
     quantized = dtype in ("int8", jnp.int8)
@@ -212,6 +223,7 @@ def init_layer_cache(batch: int, num_pages: int, page_size: int,
         cur_off=jnp.zeros((batch,), jnp.int32),
         k_scale=jnp.zeros(sshape, jnp.float32) if quantized else None,
         v_scale=jnp.zeros(sshape, jnp.float32) if quantized else None,
+        stats=devstats.zeros() if track_stats else None,
     )
 
 
@@ -238,7 +250,10 @@ def alloc_pages(cache: PagedLayerCache, need):
     found = jnp.searchsorted(csum, rank + 1, side="left")
     phys = jnp.where(ok, found, N).astype(jnp.int32)
     ref = cache.ref_count.at[phys].add(1)             # OOB sentinel dropped
-    return cache._replace(ref_count=ref), phys, ok
+    return cache._replace(
+        ref_count=ref,
+        stats=devstats.bump(cache.stats, devstats.PAGES_ALLOCATED, ok),
+    ), phys, ok
 
 
 def _unref_pages(cache: PagedLayerCache, tgt) -> PagedLayerCache:
@@ -261,10 +276,16 @@ def _unref_pages(cache: PagedLayerCache, tgt) -> PagedLayerCache:
     dec = jnp.zeros((N + 1,), jnp.int32).at[tgt].add(1)[:N]
     new_ref = jnp.maximum(cache.ref_count - dec, 0)
     newly_free = (dec > 0) & (cache.ref_count > 0) & (new_ref == 0)
+    # RELEASED counts the decrements that actually landed (the clamp means
+    # dec > ref is over-asking), so Δ sum(ref_count) reconciles exactly
+    stats = devstats.bump(cache.stats, devstats.PAGES_RELEASED,
+                          jnp.minimum(dec, cache.ref_count))
+    stats = devstats.bump(stats, devstats.PAGES_FREED, newly_free)
     return cache._replace(
         pos=jnp.where(newly_free[:, None], -1, cache.pos),
         score=jnp.where(newly_free[:, None], -jnp.inf, cache.score),
         ref_count=new_ref,
+        stats=stats,
     )
 
 
@@ -358,7 +379,9 @@ def write_token(cache: PagedLayerCache, k_tok, v_tok, pos_tok, score_tok,
     pos = cache.pos.at[tgt, o].set(pos_tok.astype(jnp.int32))
     score = cache.score.at[tgt, o].set(score_tok.astype(jnp.float32))
     off = jnp.where(ok, o + 1, o)
-    return cache._replace(k=k, v=v, pos=pos, score=score, cur_off=off)
+    return cache._replace(
+        k=k, v=v, pos=pos, score=score, cur_off=off,
+        stats=devstats.bump(cache.stats, devstats.TOKENS_WRITTEN, ok))
 
 
 def write_prompt_pages(cache: PagedLayerCache, k_sel, v_sel, pos_sel, score_sel,
@@ -366,7 +389,10 @@ def write_prompt_pages(cache: PagedLayerCache, k_sel, v_sel, pos_sel, score_sel,
     """Bulk-write C selected prompt tokens (already compressed by the prefill
     policy) into logical pages [0 .. C/page). C must be a multiple of
     page_size. RESETS the whole cache: every request row is rewritten, all
-    previous mappings are discarded.
+    previous mappings are discarded. Being a wholesale reset it does NOT
+    emit devstats events (the conservation identities of DESIGN.md §9 hold
+    across the incremental mutators only; the engine's unified step never
+    calls this — it is the offline/bench path).
 
     Physical placement is row-major over the first B*(n+1) pool pages —
     deterministic, so prefill results are bit-stable regardless of what the
@@ -450,7 +476,9 @@ def evict_page(cache: PagedLayerCache, page_idx, enable=None) -> PagedLayerCache
     cache = _free_phys(cache, jnp.maximum(phys, 0), en)
     bt = cache.block_table.at[b, page_idx].set(
         jnp.where(en, -1, cache.block_table[b, page_idx]))
-    return cache._replace(block_table=bt)
+    return cache._replace(
+        block_table=bt,
+        stats=devstats.bump(cache.stats, devstats.PAGES_EVICTED, en))
 
 
 def fork_page(cache: PagedLayerCache, slot, enable=None):
@@ -487,6 +515,7 @@ def fork_page(cache: PagedLayerCache, slot, enable=None):
         v_scale=cp(cache.v_scale) if cache.quantized else None,
         block_table=cache.block_table.at[b, slot].set(
             jnp.where(do, newp.astype(jnp.int32), phys)),
+        stats=devstats.bump(cache.stats, devstats.PAGES_FORKED, do),
     )
     # release one reference on the source (was > 1, so this never invalidates
     # unless EVERY mapper forked away in this very call — then it frees)
@@ -537,9 +566,13 @@ def evict_token(cache: PagedLayerCache, flat_idx, enable=None) -> PagedLayerCach
     phys = cache.block_table[b, pi]
     en = enable & (phys >= 0) & (cache.ref_count[jnp.maximum(phys, 0)] <= 1)
     tgt = jnp.where(en, jnp.maximum(phys, 0), N)
+    # count only evictions that invalidated a LIVE token (clamped read of
+    # row N-1 for masked rows is harmless — en gates it out)
+    live = en & (cache.pos[jnp.minimum(tgt, N - 1), oi] >= 0)
     return cache._replace(
         pos=cache.pos.at[tgt, oi].set(-1),
         score=cache.score.at[tgt, oi].set(-jnp.inf),
+        stats=devstats.bump(cache.stats, devstats.TOKENS_EVICTED, live),
     )
 
 
@@ -604,6 +637,7 @@ def adopt_prefix(cache: PagedLayerCache, src, n_pages, enable=None
     return cache._replace(
         block_table=bt,
         ref_count=cache.ref_count.at[tgt].add(1),
+        stats=devstats.bump(cache.stats, devstats.PAGES_ADOPTED, take),
         cur_page=jnp.where(en, jnp.maximum(n_pages - 1, 0).astype(jnp.int32),
                            cache.cur_page),
         cur_off=jnp.where(en, cache.page_size, cache.cur_off),
@@ -634,6 +668,8 @@ def rollover_to_free_page(cache: PagedLayerCache, need):
     shared_penalty = jnp.where(_shared_slots(c), 1e6, 0.0)
     cand = jnp.where((tpp > 0) & ~cur_onehot, tpp + shared_penalty, jnp.inf)
     victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+    c = c._replace(stats=devstats.bump(c.stats, devstats.FORCED_EVICTIONS,
+                                       must_force))
     c = evict_page(c, victim, enable=must_force)
     slot2, _ = find_free_slot(c)
     slot = jnp.where(must_force, slot2, slot)
@@ -713,9 +749,11 @@ def evict_token_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
     tgt = jnp.where(en, phys, N).reshape(-1)
     off = jnp.broadcast_to(jnp.arange(page, dtype=jnp.int32), (B, P, page)
                            ).reshape(-1)
+    live = en & (cache.pos_view() >= 0)   # only live slots count as evicted
     return cache._replace(
         pos=cache.pos.at[tgt, off].set(-1),
         score=cache.score.at[tgt, off].set(-jnp.inf),
+        stats=devstats.bump(cache.stats, devstats.TOKENS_EVICTED, live),
     )
 
 
@@ -732,7 +770,9 @@ def evict_pages_mask(cache: PagedLayerCache, mask) -> PagedLayerCache:
     en = mask & cache.mapped_mask()                       # (B, P)
     tgt = jnp.where(en, cache._phys(), N).reshape(-1)
     cache = _unref_pages(cache, tgt)
-    return cache._replace(block_table=jnp.where(en, -1, cache.block_table))
+    return cache._replace(
+        block_table=jnp.where(en, -1, cache.block_table),
+        stats=devstats.bump(cache.stats, devstats.PAGES_EVICTED, en))
 
 
 def row_intact_prefix_pages(cache: PagedLayerCache, row) -> jax.Array:

@@ -29,6 +29,12 @@ attention pass the step already ran. Policies that don't rank by page
 score ignore it; windowed chunk eviction falls back to the stored path
 (out-of-window drops invalidate scores computed at attention time).
 
+Telemetry (DESIGN.md §9): policies need no instrumentation of their own —
+every pool mutation they invoke (``evict_page``, ``evict_token[_mask]``,
+``rollover_to_free_page`` force-evicts, CoW forks) bumps the cache's
+device stats vector inside ``paged_cache.py``, so per-policy eviction
+counts fall out of the ``pool.*`` counters for free.
+
 Policies:
   paged_eviction   the paper: structured block-wise eviction at page-full
                    boundaries using S = ||V||/||K|| page means

@@ -1,11 +1,17 @@
 """Serving driver: continuous batching with a selectable eviction policy.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
-        --policy paged_eviction --budget 64 --page 8 --requests 8
-"""
+        --policy paged_eviction --budget 64 --page 8 --requests 8 \
+        --trace /tmp/trace.jsonl --snapshot /tmp/metrics.json
+
+Prints the obs metrics dashboard (latency histograms with p50/p90/p99,
+pool counters) after the run; ``--trace`` additionally writes one JSONL
+event per engine step (schema: repro.obs.trace, validate with
+``python -m repro.obs.trace FILE``)."""
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -13,6 +19,7 @@ import numpy as np
 
 from repro.configs import CacheConfig, get_arch
 from repro.models.transformer import init_model
+from repro.obs import ObsConfig
 from repro.serving import Engine, SamplingParams
 
 
@@ -39,6 +46,15 @@ def main() -> None:
                     help="give every request this many common leading "
                          "prompt tokens (exercises prefix sharing)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="write a per-step JSONL trace here")
+    ap.add_argument("--snapshot", default=None, metavar="FILE",
+                    help="write the final metrics snapshot (JSON) here")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable all engine instrumentation (the bare "
+                         "baseline the BENCH_obs overhead gate compares to)")
+    ap.add_argument("--profile-annotations", action="store_true",
+                    help="wrap plan/step in jax.profiler.TraceAnnotation")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -51,12 +67,14 @@ def main() -> None:
     ccfg = CacheConfig(page_size=args.page, cache_budget=args.budget,
                        policy=args.policy,
                        dtype="float32" if args.reduced else "bfloat16")
+    obs = ObsConfig(metrics=not args.no_metrics, trace_path=args.trace,
+                    profiler_annotations=args.profile_annotations)
     eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=args.max_batch,
                  max_prompt_len=args.prompt_len,
                  max_new_tokens=args.new_tokens,
                  sampling=SamplingParams(greedy=args.greedy),
                  chunk_size=args.chunk, token_budget=args.token_budget,
-                 prefix_sharing=not args.no_prefix_sharing)
+                 prefix_sharing=not args.no_prefix_sharing, obs=obs)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
@@ -82,6 +100,16 @@ def main() -> None:
     if ttfts:
         print(f"ttft: mean={1e3 * np.mean(ttfts):.1f}ms "
               f"max={1e3 * np.max(ttfts):.1f}ms (chunk={args.chunk})")
+    eng.close()
+    if not args.no_metrics:
+        print(eng.obs.registry.render())
+    if args.snapshot:
+        with open(args.snapshot, "w") as f:
+            json.dump(eng.metrics_snapshot(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.snapshot}")
+    if args.trace:
+        print(f"wrote {args.trace} ({eng.obs.writer.events_written} events)")
 
 
 if __name__ == "__main__":

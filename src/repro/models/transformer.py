@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import CacheConfig, LayerSpec, ModelConfig
+from repro.core import devstats
 from repro.core.paged_cache import (
     PagedLayerCache,
     adopt_prefix,
@@ -288,10 +289,13 @@ def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
 
 def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
                        policy: EvictionPolicy, ccfg: CacheConfig,
-                       cond=None, dtype=None, chunk_tokens: int = 0):
+                       cond=None, dtype=None, chunk_tokens: int = 0,
+                       track_stats: bool = False):
     """Empty caches for decode-from-scratch (or dry-run ShapeDtype specs).
     ``chunk_tokens``: size block tables for chunked prefill (see
-    :func:`_layer_cache_shapes`)."""
+    :func:`_layer_cache_shapes`). ``track_stats``: attach the per-layer
+    devstats telemetry vector (DESIGN.md §9); the unified step re-zeroes it
+    each iteration, and :func:`collect_step_stats` sums it over layers."""
     from repro.core.paged_cache import init_layer_cache
     dt = dtype or dtype_of(ccfg.dtype)
     pat = cfg.layer_pattern()
@@ -303,7 +307,8 @@ def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int,
             pages = _layer_cache_shapes(cfg, spec, batch, seq_len, policy,
                                         ccfg, chunk_tokens=chunk_tokens)
             kv = init_layer_cache(batch, pages, ccfg.page_size,
-                                  cfg.num_kv_heads, hd, dt)
+                                  cfg.num_kv_heads, hd, dt,
+                                  track_stats=track_stats)
             xa = None
             if cfg.cross_attention:
                 xa = StaticKVCache(
@@ -371,6 +376,10 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
         q, k, v = attn_mod.project_qkv(lp["attn"], cfg, h,
                                        jnp.maximum(positions, 0))
         kvc: PagedLayerCache = cache.kv
+        # telemetry: the stats vector holds per-STEP counts — zero it at
+        # layer entry so collect_step_stats sees only this iteration
+        if kvc.stats is not None:
+            kvc = kvc._replace(stats=devstats.zeros())
         # rows starting a new request free the previous occupant's pages
         # back to the shared pool before their first chunk allocates
         kvc = release_rows(kvc, reset_mask)
@@ -529,6 +538,30 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                               cur_pos=cur_pos + n_tok)
 
 
+def collect_step_stats(cache: ModelCache):
+    """Sum every attention layer's devstats vector -> (devstats.NSTATS,)
+    int32, or None when the caches don't track stats. Pure jnp — the engine
+    calls this INSIDE its jitted step so the whole telemetry path costs one
+    tiny reduction plus one (NSTATS,) transfer per step (DESIGN.md §9).
+    Call AFTER the step (each layer zeroes its vector at entry, so the sum
+    is exactly this iteration's events across the stack)."""
+    vecs = []
+    for lc in cache.pattern:
+        if lc.kv is None or lc.kv.stats is None:
+            continue
+        vecs.append(jnp.sum(lc.kv.stats, axis=0))   # stats stacked (R, NSTATS)
+    for lc in cache.tail:
+        if lc.kv is None or lc.kv.stats is None:
+            continue
+        vecs.append(lc.kv.stats)
+    if not vecs:
+        return None
+    out = vecs[0]
+    for v in vecs[1:]:
+        out = out + v
+    return out
+
+
 def intact_prefix_pages(cache: ModelCache, row) -> jax.Array:
     """() int32 — how many leading FULL prompt pages of batch row ``row``
     are intact in EVERY attention layer's cache (min over layers; stacked
@@ -660,6 +693,8 @@ def _decode_layer(lp, cfg, spec, x, cache: LayerCaches, cur_pos,
     if spec.mixer == "attn":
         q, k, v = attn_mod.decode_project_qkv(lp["attn"], cfg, h, cur_pos)
         kvc: PagedLayerCache = cache.kv
+        if kvc.stats is not None:
+            kvc = kvc._replace(stats=devstats.zeros())
         score = policy.write_score(k, v, cur_pos)
         # lazy rollover: chunked prefill parks the head at cur_off ==
         # page_size when a chunk ends exactly on a page boundary — the

@@ -1,0 +1,69 @@
+"""Serving telemetry (DESIGN.md §9): metrics registry + per-step trace.
+
+Three pieces, deliberately decoupled from each other and from the engine:
+
+- :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket latency
+  histograms with real p50/p90/p99, snapshot-able to JSON and renderable
+  as a text dashboard.
+- :mod:`repro.obs.trace` — buffered per-step JSONL trace (schema +
+  validator) and optional ``jax.profiler`` annotation scopes.
+- :mod:`repro.core.devstats` — the device half: the int32 stats vector
+  the pool mutators accumulate inside the jitted step (no host callbacks
+  on the hot path), reconciled into the registry once per step.
+
+``ObsConfig`` is the single knob surface the engine takes; ``EngineObs``
+bundles the live registry + writer so ``Engine.step`` carries one handle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               LATENCY_BOUNDS_S)
+from repro.obs.trace import (TRACE_SCHEMA, TRACE_SCHEMA_VERSION, TraceWriter,
+                             annotation, validate_event, validate_file)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "LATENCY_BOUNDS_S",
+    "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "TraceWriter", "annotation",
+    "validate_event", "validate_file", "ObsConfig", "EngineObs",
+]
+
+
+@dataclass
+class ObsConfig:
+    """What the engine should instrument.
+
+    metrics      : host registry + device stats vector (the ≤2%-overhead
+                   default-on path — BENCH_obs.json gates it)
+    trace_path   : write one JSONL event per step here (None == no trace)
+    profiler_annotations : wrap plan/step in jax.profiler.TraceAnnotation
+                   scopes (off by default; only useful under a profiler)
+    program_ceiling : compiled-program count the engine expects at steady
+                   state; crossing it flips the unexpected_compile flag on
+                   that step's trace event and bumps the sentinel counter
+    """
+    metrics: bool = True
+    trace_path: str | None = None
+    profiler_annotations: bool = False
+    program_ceiling: int = 2
+
+    @property
+    def enabled(self) -> bool:
+        return self.metrics or self.trace_path is not None
+
+
+@dataclass
+class EngineObs:
+    """Live telemetry state owned by one Engine."""
+    cfg: ObsConfig
+    registry: MetricsRegistry = field(default_factory=MetricsRegistry)
+    writer: TraceWriter | None = None
+
+    def __post_init__(self):
+        if self.cfg.trace_path and self.writer is None:
+            self.writer = TraceWriter(self.cfg.trace_path)
+
+    def close(self) -> None:
+        if self.writer is not None:
+            self.writer.close()

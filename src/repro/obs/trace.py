@@ -1,0 +1,175 @@
+"""Structured per-step trace: buffered JSONL writer + schema + profiler scopes.
+
+One event per ``Engine.step`` iteration. Events are flat JSON objects so
+any tool (jq, pandas, ``benchmarks/roofline.py --obs``) can consume them
+without a reader library; the schema below is the contract and
+:func:`validate_event` enforces it (tests + the CI trace step call it).
+
+The writer buffers ``flush_every`` encoded lines before touching the file
+so the hot path pays one json.dumps per step and an amortized write —
+never an fsync. Use as a context manager or call close(); atexit is NOT
+installed (serving drivers own their shutdown order).
+
+``annotation(name)`` wraps a host region in ``jax.profiler.TraceAnnotation``
+when profiler annotations are enabled AND the jax build has them —
+otherwise it is a zero-cost nullcontext, so the engine can always write
+``with trace.annotation("engine.step"):`` unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+from typing import IO
+
+# Trace event schema, version 1. field -> (type(s), required).
+# Integer counter fields are per-STEP deltas (device stats vector summed
+# over layers), not running totals; *_ms are host wall-clock milliseconds.
+TRACE_SCHEMA_VERSION = 1
+TRACE_SCHEMA: dict = {
+    "v": (int, True),               # schema version
+    "step": (int, True),            # engine step counter at emission
+                                    # (monotonic, 1-based after each step)
+    "kind": (str, True),            # "decode" | "mixed" | "prefill" | "idle"
+    "t_ms": (float, True),          # host time since engine start
+    "plan_ms": (float, True),       # scheduler plan() wall time
+    "step_ms": (float, True),       # jitted step wall time (dispatch+sync)
+    "decode_rows": (int, True),     # batch mix this iteration
+    "prefill_rows": (int, True),
+    "reset_rows": (int, True),
+    "adopt_rows": (int, True),
+    "tokens": (int, True),          # live tokens consumed (sum n_tok)
+    "tokens_written": (int, False),     # device stats (absent if obs off)
+    "pages_allocated": (int, False),
+    "pages_freed": (int, False),
+    "pages_released": (int, False),
+    "pages_adopted": (int, False),
+    "pages_forked": (int, False),
+    "pages_evicted": (int, False),
+    "tokens_evicted": (int, False),
+    "forced_evictions": (int, False),
+    "pool_pages": (int, False),     # physical pool size (per layer)
+    "free_pages": (int, False),     # engine's running free-list estimate
+    "programs": (int, True),        # compiled-program cache size (sentinel)
+    "unexpected_compile": (bool, False),  # step crossed the known ceiling
+    "finished": (int, True),        # requests retired this step
+}
+
+
+def validate_event(ev: dict) -> list:
+    """Return a list of schema violations (empty == valid)."""
+    errs = []
+    if not isinstance(ev, dict):
+        return [f"event is {type(ev).__name__}, not object"]
+    for key, (typ, required) in TRACE_SCHEMA.items():
+        if key not in ev:
+            if required:
+                errs.append(f"missing required field {key!r}")
+            continue
+        val = ev[key]
+        ok = isinstance(val, typ) and not (typ is int and isinstance(val, bool))
+        if typ is float:
+            ok = isinstance(val, (int, float)) and not isinstance(val, bool)
+        if not ok:
+            errs.append(f"{key!r}: expected {typ.__name__}, "
+                        f"got {type(val).__name__}")
+    for key in ev:
+        if key not in TRACE_SCHEMA:
+            errs.append(f"unknown field {key!r}")
+    if ev.get("v") not in (None, TRACE_SCHEMA_VERSION):
+        errs.append(f"schema version {ev.get('v')} != {TRACE_SCHEMA_VERSION}")
+    if ev.get("kind") not in (None, "decode", "mixed", "prefill", "idle"):
+        errs.append(f"bad kind {ev.get('kind')!r}")
+    return errs
+
+
+def validate_file(path: str, max_errors: int = 20) -> list:
+    """Validate every line of a JSONL trace; returns violations with line
+    numbers (empty == valid file)."""
+    errs = []
+    with open(path) as f:
+        n = -1
+        for n, line in enumerate(f):
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                errs.append(f"line {n}: not JSON ({e})")
+                continue
+            for e in validate_event(ev):
+                errs.append(f"line {n}: {e}")
+            if len(errs) >= max_errors:
+                errs.append("... (truncated)")
+                return errs
+        if n < 0:
+            errs.append("empty trace")
+    return errs
+
+
+class TraceWriter:
+    """Buffered JSONL sink. ``emit`` encodes and appends to an in-memory
+    list; the file is written every ``flush_every`` events and on close."""
+
+    def __init__(self, path: str, flush_every: int = 64):
+        self.path = path
+        self.flush_every = max(1, flush_every)
+        self.events_written = 0
+        self._buf: list = []
+        self._f: IO | None = open(path, "w")
+
+    def emit(self, ev: dict) -> None:
+        if self._f is None:
+            raise ValueError(f"TraceWriter({self.path}) is closed")
+        self._buf.append(json.dumps(ev, separators=(",", ":")))
+        self.events_written += 1
+        if len(self._buf) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        if self._buf and self._f is not None:
+            self._f.write("\n".join(self._buf) + "\n")
+            self._buf.clear()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.flush()
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def annotation(name: str, enabled: bool = True):
+    """Context manager: ``jax.profiler.TraceAnnotation(name)`` when enabled
+    and available, else a nullcontext. Lets device profiles line up with
+    host-side trace events without making jax.profiler a hard dependency."""
+    if not enabled:
+        return contextlib.nullcontext()
+    try:
+        import jax.profiler
+        return jax.profiler.TraceAnnotation(name)
+    except (ImportError, AttributeError):
+        return contextlib.nullcontext()
+
+
+def main(argv=None) -> int:
+    """CLI: ``python -m repro.obs.trace TRACE.jsonl`` — exit 0 iff valid."""
+    import argparse
+    ap = argparse.ArgumentParser(description="validate a trace JSONL file")
+    ap.add_argument("path")
+    args = ap.parse_args(argv)
+    errs = validate_file(args.path)
+    if errs:
+        for e in errs:
+            print(f"INVALID {args.path}: {e}")
+        return 1
+    with open(args.path) as f:
+        n = sum(1 for _ in f)
+    print(f"OK {args.path}: {n} events, schema v{TRACE_SCHEMA_VERSION}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,13 +20,28 @@ for the full batch, admission can never over-commit HBM (DESIGN.md §2,
 §6); pages a request evicts — or releases when it retires — return to the
 SHARED free list and become headroom for every other request.
 
-Telemetry per step: wall time split prefill/decode, tokens generated —
-the benchmarks build the paper's throughput/TPOT/overhead tables from
-these. :meth:`Engine.pool_stats` reports fleet-level pool occupancy.
+Telemetry (DESIGN.md §9): the engine is instrumented end to end through
+``repro.obs``. Each step, pool-event counts (pages allocated / freed /
+evicted / forked / adopted, tokens written / evicted, force-evicts) ride
+OUT of the jitted program as a tiny int32 stats vector accumulated by the
+``paged_cache`` mutators themselves — no host callbacks on the hot path —
+and are reconciled into a host :class:`~repro.obs.MetricsRegistry`
+(latency histograms with real p50/p90/p99 for TTFT, ITL, TPOT, step wall
+time, scheduler plan time; counters; gauges). Optionally every iteration
+emits one JSONL trace event (step kind, batch mix, tokens, page counters,
+pool occupancy, program-cache size) through a buffered
+:class:`~repro.obs.TraceWriter`. A recompile sentinel tracks the
+compiled-program count against the known ceiling (2: T == chunk and
+T == 1) and flags any unexpected compile once through the trace. The
+legacy :class:`EngineStats` scalars and :meth:`Engine.pool_stats`
+(fleet-level pool occupancy, host-recomputed from ref counts) remain the
+benchmark-facing summaries; ``BENCH_obs.json`` gates the fully
+instrumented TPOT ladder at ≤2% overhead vs. instrumentation off.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -34,13 +49,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CacheConfig, ModelConfig
+from repro.core import devstats
 from repro.core.policies import EvictionPolicy, get_policy
 from repro.models.transformer import (
     ModelCache,
+    collect_step_stats,
     forward_step,
     init_decode_caches,
     intact_prefix_pages,
 )
+from repro.obs import EngineObs, ObsConfig
+from repro.obs.trace import TRACE_SCHEMA_VERSION, annotation
 from repro.serving.request import Request, RequestStatus, SamplingParams
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import Scheduler
@@ -73,7 +92,8 @@ class Engine:
                  use_pallas: bool = False, seed: int = 0,
                  chunk_size: int = 64, token_budget: int | None = None,
                  prefix_sharing: bool = True, decode_splits: int = 1,
-                 fused_scores: bool | None = None):
+                 fused_scores: bool | None = None,
+                 obs: ObsConfig | None = None):
         self.cfg = cfg
         self.params = params
         self.ccfg = cache_cfg
@@ -106,12 +126,35 @@ class Engine:
         self._key = jax.random.PRNGKey(seed)
         self._next_id = 0
 
+        # telemetry (DESIGN.md §9): metrics default ON — the device stats
+        # vector + registry are the ≤2%-overhead path BENCH_obs.json gates.
+        # obs=ObsConfig(metrics=False) restores the bare pre-obs pytree.
+        self.obs = EngineObs(obs if obs is not None else ObsConfig())
+        self._t_start = time.perf_counter()
+        self._programs_seen = 0
+        self._warned_compile = False
+
         # batch-wide state (block tables carry chunk headroom: a prefilling
         # row transiently holds budget + chunk tokens between boundaries)
         self.cache: ModelCache = init_decode_caches(
             cfg, max_batch, self.total_len, self.policy, self.ccfg,
-            chunk_tokens=self.chunk_size)
+            chunk_tokens=self.chunk_size, track_stats=self.obs.cfg.metrics)
         self.cur_tokens = np.zeros((max_batch,), np.int32)
+
+        # running pool occupancy, maintained from the device stats deltas
+        # (Δfree == freed - allocated) so per-step trace events never pay a
+        # pool_stats() device_get. Initial state is static: each attention
+        # layer starts with `batch` pre-mapped working pages.
+        total = free = 0
+        for lc in list(self.cache.pattern) + list(self.cache.tail):
+            if lc.kv is None:
+                continue
+            shp = lc.kv.ref_count.shape        # (R, N) stacked or (N,) tail
+            reps, n = (shp if len(shp) == 2 else (1, shp[0]))
+            total += reps * n
+            free += reps * (n - max_batch)
+        self._pool_pages_total = total
+        self._free_pages_est = free
 
         self._step_fn = jax.jit(self._step_impl)
         self._probe_fn = jax.jit(intact_prefix_pages)
@@ -121,7 +164,13 @@ class Engine:
                    reset_mask, share_src, share_pages, cache, key):
         """The unified step: append + attend + evict + sample. Compiled once
         per token-dim T — the engine only ever calls it with T == chunk_size
-        (mixed/prefill steps) and T == 1 (decode-only steps)."""
+        (mixed/prefill steps) and T == 1 (decode-only steps).
+
+        Third output: the summed device stats vector ((devstats.NSTATS,)
+        int32, this step's pool events across every attention layer), or
+        None when the caches don't track stats — summing happens INSIDE the
+        jit so telemetry costs one reduction + one tiny transfer, never a
+        host callback."""
         logits, cache = forward_step(
             params, self.cfg, tokens, n_tok, cache, self.policy, self.ccfg,
             decode_mask=decode_mask, prefill_mask=prefill_mask,
@@ -131,7 +180,7 @@ class Engine:
         s = self.sampling
         next_tok = sample_tokens(key, logits, temperature=s.temperature,
                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
-        return next_tok, cache
+        return next_tok, cache, collect_step_stats(cache)
 
     def _prefix_probe(self, slot: int) -> int:
         """Device half of prefix-sharing admission (scheduler callback):
@@ -160,12 +209,75 @@ class Engine:
             req.status = RequestStatus.FINISHED_LENGTH
         if req.finished:
             self.scheduler.retire(req)
+            if self.obs.cfg.metrics:
+                reg = self.obs.registry
+                reg.counter("engine.requests_finished").inc()
+                if req.decode_times:
+                    reg.histogram("engine.tpot_s").observe(
+                        sum(req.decode_times) / len(req.decode_times))
+
+    # ------------------------------------------------------------- telemetry
+    def _check_recompile(self) -> bool:
+        """Recompile sentinel: returns True iff this step grew the compiled-
+        program cache PAST the known ceiling (2 programs: T == chunk and
+        T == 1). The first unexpected compile warns once; every one bumps
+        the counter and flags the step's trace event."""
+        n = self.num_compiled_programs()
+        if n < 0:                         # no _cache_size introspection
+            return False
+        grew, self._programs_seen = n > self._programs_seen, n
+        unexpected = grew and n > self.obs.cfg.program_ceiling
+        if self.obs.cfg.metrics:
+            self.obs.registry.gauge("engine.programs").set(n)
+            if unexpected:
+                self.obs.registry.counter("engine.unexpected_compiles").inc()
+        if unexpected and not self._warned_compile:
+            self._warned_compile = True
+            warnings.warn(
+                f"engine step compiled program #{n} (ceiling "
+                f"{self.obs.cfg.program_ceiling}) — an operand shape or "
+                f"static argument is varying across steps", stacklevel=3)
+        return unexpected
+
+    def _emit_trace(self, kind: str, plan, plan_dt: float, step_dt: float,
+                    tokens: int, st, finished: int, unexpected: bool) -> None:
+        ev = {
+            "v": TRACE_SCHEMA_VERSION,
+            "step": self.stats.steps,
+            "kind": kind,
+            "t_ms": (time.perf_counter() - self._t_start) * 1e3,
+            "plan_ms": plan_dt * 1e3,
+            "step_ms": step_dt * 1e3,
+            "decode_rows": len(plan.decode),
+            "prefill_rows": len(plan.prefill),
+            "reset_rows": len(plan.reset),
+            "adopt_rows": len(plan.adopt),
+            "tokens": tokens,
+            "programs": max(self._programs_seen, 0),
+            "finished": finished,
+        }
+        if st is not None:
+            for i, name in enumerate(devstats.STAT_NAMES):
+                ev[name] = int(st[i])
+            ev["pool_pages"] = self._pool_pages_total
+            ev["free_pages"] = self._free_pages_est
+        if unexpected:
+            ev["unexpected_compile"] = True
+        self.obs.writer.emit(ev)
 
     def step(self) -> bool:
         """One engine iteration: plan a unified step (admission + decode
         tokens + prompt chunks) and run it. Returns whether work remains."""
-        plan = self.scheduler.plan()
+        oc = self.obs.cfg
+        t_plan0 = time.perf_counter()
+        with annotation("engine.plan", enabled=oc.profiler_annotations):
+            plan = self.scheduler.plan()
+        plan_dt = time.perf_counter() - t_plan0
+        if oc.metrics:
+            self.obs.registry.histogram("engine.plan_s").observe(plan_dt)
         if plan.empty:
+            if self.obs.writer is not None:
+                self._emit_trace("idle", plan, plan_dt, 0.0, 0, None, 0, False)
             return self.scheduler.has_work()
         B = self.max_batch
         T = self.chunk_size if plan.prefill else 1
@@ -194,14 +306,16 @@ class Engine:
 
         t0 = time.perf_counter()
         self._key, sk = jax.random.split(self._key)
-        next_tok, self.cache = self._step_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(n_tok),
-            jnp.asarray(decode_mask), jnp.asarray(prefill_mask),
-            jnp.asarray(reset_mask), jnp.asarray(share_src),
-            jnp.asarray(share_pages), self.cache, sk)
-        next_np = np.asarray(jax.device_get(next_tok))
+        with annotation("engine.step", enabled=oc.profiler_annotations):
+            next_tok, self.cache, stats_dev = self._step_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(n_tok),
+                jnp.asarray(decode_mask), jnp.asarray(prefill_mask),
+                jnp.asarray(reset_mask), jnp.asarray(share_src),
+                jnp.asarray(share_pages), self.cache, sk)
+            next_np = np.asarray(jax.device_get(next_tok))
         dt = time.perf_counter() - t0
         now = time.perf_counter()
+        unexpected = self._check_recompile()
         self.stats.steps += 1
         if plan.prefill:
             self.stats.prefill_s += dt
@@ -209,6 +323,31 @@ class Engine:
             self.stats.decode_s += dt
             self.stats.decode_steps += 1
 
+        # reconcile this step's device pool events (one (NSTATS,) transfer)
+        st = None
+        if stats_dev is not None:
+            st = np.asarray(jax.device_get(stats_dev))
+            self.stats.pages_evicted += int(st[devstats.PAGES_EVICTED])
+            self.stats.tokens_evicted += int(st[devstats.TOKENS_EVICTED])
+            self.stats.forced_evictions += int(st[devstats.FORCED_EVICTIONS])
+            self._free_pages_est += int(st[devstats.PAGES_FREED]) - \
+                int(st[devstats.PAGES_ALLOCATED])
+        reg = self.obs.registry if oc.metrics else None
+        if reg is not None:
+            reg.histogram("engine.step_wall_s").observe(dt)
+            reg.counter("engine.steps").inc()
+            reg.counter("engine.tokens").inc(int(n_tok.sum()))
+            if st is not None:
+                for i, name in enumerate(devstats.STAT_NAMES):
+                    reg.counter(f"pool.{name}").inc(int(st[i]))
+                reg.gauge("pool.free_pages").set(self._free_pages_est)
+                reg.gauge("pool.total_pages").set(self._pool_pages_total)
+            for slot in plan.reset:
+                r = self.scheduler.slots[slot]
+                if r is not None:
+                    reg.histogram("engine.queue_s").observe(r.queue_time)
+
+        finished_before = len(self.scheduler.finished)
         for slot, req in plan.decode:
             req.output_tokens.append(int(next_np[slot]))
             req.decode_times.append(dt)
@@ -216,18 +355,31 @@ class Engine:
             self.stats.tokens_generated += 1
             if not plan.prefill:
                 self.stats.decode_tokens += 1
+            if reg is not None:
+                reg.histogram("engine.itl_s").observe(dt)
             self._maybe_finish(req)
         for slot, req, chunk, completes in plan.prefill:
             req.prefill_time += dt
             if completes:
                 # the sampled token at the prompt's last position is this
-                # request's FIRST output token (its TTFT moment)
+                # request's FIRST output token (its TTFT moment, dated from
+                # ARRIVAL — an adopter's shorter prefill must not hide its
+                # queueing/deferral time; see Request.ttft)
                 req.output_tokens.append(int(next_np[slot]))
                 req.first_token_time = now
                 self.cur_tokens[slot] = next_np[slot]
                 req.status = RequestStatus.RUNNING
                 self.stats.tokens_generated += 1
+                if reg is not None:
+                    reg.histogram("engine.ttft_s").observe(
+                        now - req.arrival_time)
                 self._maybe_finish(req)
+        if self.obs.writer is not None:
+            kind = "mixed" if (plan.prefill and plan.decode) else \
+                ("prefill" if plan.prefill else "decode")
+            self._emit_trace(kind, plan, plan_dt, dt, int(n_tok.sum()), st,
+                             len(self.scheduler.finished) - finished_before,
+                             unexpected)
         return self.scheduler.has_work()
 
     def run(self, max_steps: int = 100_000) -> list[Request]:
@@ -238,9 +390,19 @@ class Engine:
 
     def num_compiled_programs(self) -> int:
         """Distinct compiled executables behind the engine (the per-slot
-        recompilation family is dead: expect 2 — T == chunk and T == 1)."""
+        recompilation family is dead: expect 2 — T == chunk and T == 1).
+        The recompile sentinel mirrors this into the ``engine.programs``
+        gauge and counts ceiling crossings in ``engine.unexpected_compiles``."""
         size = getattr(self._step_fn, "_cache_size", None)
         return int(size()) if callable(size) else -1
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-safe snapshot of every metric (see MetricsRegistry)."""
+        return self.obs.registry.snapshot()
+
+    def close(self) -> None:
+        """Flush and close the trace writer (idempotent)."""
+        self.obs.close()
 
     def pool_stats(self) -> dict:
         """Fleet-level page-pool occupancy, aggregated over attention layers:

@@ -43,8 +43,17 @@ class Request:
     shared_tokens: int = 0                  # prompt tokens covered by the
                                             # adopted pages (prefill skipped)
     arrival_time: float = field(default_factory=time.perf_counter)
+    admission_time: float = 0.0             # perf_counter when the scheduler
+                                            # assigned a batch slot (prefix-
+                                            # sharing admissions may be
+                                            # DEFERRED several steps past
+                                            # arrival waiting for the shared
+                                            # prefix to finish prefilling)
     first_token_time: float = 0.0           # perf_counter at first emission
     prefill_time: float = 0.0               # wall time spent in prefill steps
+                                            # (adopters: only the NON-shared
+                                            # chunks — adopted pages cost no
+                                            # prefill compute)
     decode_times: list[float] = field(default_factory=list)
 
     @property
@@ -57,10 +66,26 @@ class Request:
 
     @property
     def ttft(self) -> float:
-        """Time-to-first-token (s); 0.0 until the first token is emitted."""
+        """Time-to-first-token (s); 0.0 until the first token is emitted.
+
+        ALWAYS dated from ``arrival_time`` — the user-perceived latency.
+        For a prefix-sharing adopter the prefill chunks are shorter (the
+        adopted pages are skipped), but any queueing/deferral time between
+        arrival and admission still counts: TTFT must never shrink just
+        because the request waited for its prefix to become adoptable.
+        ``queue_time`` exposes the waiting component separately."""
         if not self.first_token_time:
             return 0.0
         return self.first_token_time - self.arrival_time
+
+    @property
+    def queue_time(self) -> float:
+        """Arrival -> slot assignment (s); 0.0 until admitted. Includes
+        prefix-sharing deferral (waiting for the shared prefix's owner to
+        finish prefilling it)."""
+        if not self.admission_time:
+            return 0.0
+        return self.admission_time - self.arrival_time
 
     @property
     def finished(self) -> bool:

@@ -32,6 +32,7 @@ shared tokens, so shared chunks are never recomputed, and the step's
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -207,6 +208,9 @@ class Scheduler:
                 break         # FIFO: defer this request and those behind it
             self.waiting.popleft()
             req.slot = slot
+            # admission stamp: queueing (incl. prefix-sharing deferral) ends
+            # here; TTFT stays arrival-based, queue_time = this - arrival
+            req.admission_time = time.perf_counter()
             req.status = RequestStatus.PREFILLING
             self.slots[slot] = req
             stale.add(slot)

@@ -208,6 +208,11 @@ def _cache_spec(mesh: Mesh, cfg, path: str, shape: tuple, batch: int) -> P:
         return spec(d0, None)
     if name == "ref_count" and len(rest) == 1:
         return spec(_ax(_pool_dim0(rest[0], take_model=not kv_div)))
+    if name == "stats" and len(rest) == 1:
+        # (devstats.NSTATS,) telemetry vector: replicate — it is tiny and
+        # every shard's mutators contribute (the batch fall-back below
+        # would wrongly put batch axes on its only dim)
+        return spec(None)
     if name == "block_table" and len(rest) == 2:
         return spec(b, None)
     if name in ("cur_page", "cur_off", "cur_pos"):
