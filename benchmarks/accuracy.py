@@ -116,14 +116,53 @@ def run(budgets=(8, 16, 24, 32), steps: int = 900, quick: bool = False,
     return full_acc, results
 
 
+def run_regret(policies=POLICIES, budget: int = 32, quick: bool = False,
+               out: str | None = None) -> dict:
+    """Eviction-regret companion to the accuracy sweep: for each policy run
+    the shadow-probe harness (repro.obs.regret) on a small serving workload
+    and report mean output divergence + attention mass lost to eviction.
+    Unlike the recall accuracy above (task-level, end-of-context query) this
+    measures the *mechanistic* damage each policy does to every probed
+    decode step — the two should rank policies consistently."""
+    from repro.obs.regret import regret_smoke
+    pols = list(policies) + ["full"]
+    if quick:
+        pols = [policies[0], "full"]
+    results = {}
+    for polname in pols:
+        b = budget if polname != "full" else 1024
+        s = regret_smoke(polname, budget=b)
+        s.pop("outputs", None)
+        results[polname] = s
+        print(f"  regret,{polname},budget={b},probes={s['probes']},"
+              f"divergence={s['mean_divergence']:.4g},"
+              f"evicted_mass={s['mean_evicted_mass']:.4g},"
+              f"shadow_mb={s['shadow_mb']}")
+    if out:
+        from benchmarks.common import merge_json
+        merge_json(out, "regret", results)
+        print(f"  merged 'regret' section into {out}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--steps", type=int, default=900)
     ap.add_argument("--int8", action="store_true",
                     help="quantized-cache ablation (beyond-paper)")
+    ap.add_argument("--regret", action="store_true",
+                    help="run the eviction-regret shadow-probe sweep "
+                         "instead of the recall accuracy sweep")
+    ap.add_argument("--out", default=None, metavar="BENCH_JSON",
+                    help="with --regret: merge the per-policy regret "
+                         "summaries into this BENCH artifact (merge-not-"
+                         "clobber, benchmarks/common.merge_json)")
     args = ap.parse_args()
-    run(steps=args.steps, quick=args.quick, int8=args.int8)
+    if args.regret:
+        run_regret(quick=args.quick, out=args.out)
+    else:
+        run(steps=args.steps, quick=args.quick, int8=args.int8)
 
 
 if __name__ == "__main__":

@@ -158,6 +158,12 @@ def trace_summary(events: list[dict]) -> list[dict]:
     the device pool counters carried in the trace."""
     by_kind: dict = {}
     for ev in events:
+        # schema v2 traces interleave "event" (page lineage) and "probe"
+        # (eviction regret) records with the per-step records; the timing
+        # summary only consumes steps. v1 files carry no "rec" field and
+        # are all steps.
+        if ev.get("rec", "step") != "step":
+            continue
         if ev["kind"] == "idle":
             continue
         by_kind.setdefault(ev["kind"], []).append(ev)

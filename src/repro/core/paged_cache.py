@@ -810,3 +810,31 @@ def to_contiguous(cache: PagedLayerCache):
             cache.v_view().reshape(B, P * page, KV, hd),
             cache.pos_view().reshape(B, P * page),
             cache.valid_mask().reshape(B, P * page))
+
+
+# ---------------------------------------------------------------------------
+# forensics view (obs/lineage.py)
+# ---------------------------------------------------------------------------
+
+def lineage_snapshot(cache: PagedLayerCache) -> dict:
+    """Pure-jnp forensics view of one layer's pool, jitted by the engine and
+    pulled to host once per step when the lineage ledger is on. The ledger
+    diffs consecutive snapshots (plus the step plan) into alloc / adopt /
+    fork / evict / release events and reconciles its replayed state against
+    ``block_table`` / ``ref_count`` exactly (DESIGN.md §10).
+
+    ``page_scores`` is the PRE-mutation policy ranking from the *previous*
+    step's snapshot that prices an eviction observed this step — the ledger
+    reads scores from ``prev``, never ``cur``."""
+    return {
+        "block_table": cache.block_table,            # (B, P) int32
+        "ref_count": cache.ref_count,                # (N,) int32
+        "cur_page": cache.cur_page,                  # (B,) int32 working lpi
+        "tokens_per_page": cache.tokens_per_page(),  # (B, P) int32
+        "page_scores": cache.page_scores(),          # (B, P) f32, inf=empty
+        "pos_base": jnp.where(                       # (B, P) int32, -1=empty
+            cache.tokens_per_page() > 0,
+            jnp.min(jnp.where(cache.valid_mask(), cache.pos_view(),
+                              jnp.iinfo(jnp.int32).max), axis=-1),
+            -1).astype(jnp.int32),
+    }

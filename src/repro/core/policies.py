@@ -87,6 +87,11 @@ class EvictionOutcome(NamedTuple):
     pages_evicted: jax.Array    # (B,) bool — a full page was evicted
     tokens_evicted: jax.Array   # (B,) bool — a single token was evicted
     forced_evictions: jax.Array  # (B,) bool — fragmentation forced a page out
+    # forensics (obs/lineage.py): which logical page lost the argmin and at
+    # what policy score. Only meaningful where pages_evicted is True; None
+    # for policies that never evict whole pages (token-granular baselines).
+    victim_page: jax.Array | None = None    # (B,) int32 logical page index
+    victim_score: jax.Array | None = None   # (B,) f32 score at eviction
 
 
 def _no_evict(cache):
@@ -356,10 +361,13 @@ class PagedEviction(EvictionPolicy):
             full_pages &= ~cur
         cand = jnp.where(full_pages, pscores, jnp.inf)
         victim = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+        vscore = jnp.take_along_axis(pscores, victim[:, None],
+                                     axis=-1)[:, 0].astype(jnp.float32)
         cache = evict_page(cache, victim, enable=do_evict)
         cache, forced = _rollover_to_free_page(cache, page_full)
         return EvictionOutcome(cache, do_evict,
-                               jnp.zeros((cache.batch,), bool), forced)
+                               jnp.zeros((cache.batch,), bool), forced,
+                               victim_page=victim, victim_score=vscore)
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,18 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="write a per-step JSONL trace here")
+    ap.add_argument("--timeline", default=None, metavar="FILE",
+                    help="write a Chrome-trace/Perfetto JSON timeline of "
+                         "per-request spans here (load in chrome://tracing "
+                         "or ui.perfetto.dev)")
+    ap.add_argument("--lineage", action="store_true",
+                    help="keep a host-side page-lineage ledger (emits v2 "
+                         "'event' records into --trace and prints a "
+                         "reconciliation + per-request loss summary)")
+    ap.add_argument("--regret-every", type=int, default=0, metavar="N",
+                    help="probe eviction regret every N decode steps per "
+                         "request against an uncompressed shadow cache "
+                         "(0 = off; emits v2 'probe' records into --trace)")
     ap.add_argument("--snapshot", default=None, metavar="FILE",
                     help="write the final metrics snapshot (JSON) here")
     ap.add_argument("--no-metrics", action="store_true",
@@ -68,7 +80,10 @@ def main() -> None:
                        policy=args.policy,
                        dtype="float32" if args.reduced else "bfloat16")
     obs = ObsConfig(metrics=not args.no_metrics, trace_path=args.trace,
-                    profiler_annotations=args.profile_annotations)
+                    profiler_annotations=args.profile_annotations,
+                    timeline=args.timeline is not None,
+                    lineage=args.lineage,
+                    regret_every=args.regret_every)
     eng = Engine(cfg, params, cache_cfg=ccfg, max_batch=args.max_batch,
                  max_prompt_len=args.prompt_len,
                  max_new_tokens=args.new_tokens,
@@ -100,6 +115,28 @@ def main() -> None:
     if ttfts:
         print(f"ttft: mean={1e3 * np.mean(ttfts):.1f}ms "
               f"max={1e3 * np.max(ttfts):.1f}ms (chunk={args.chunk})")
+    if args.timeline:
+        n = eng.export_timeline(args.timeline)
+        print(f"wrote {args.timeline} ({n} timeline events)")
+    if args.lineage and eng.obs.ledger is not None:
+        led = eng.obs.ledger
+        print(f"lineage: {led.counts()}")
+        for slot in range(args.max_batch):
+            rep = led.request_loss_report(slot)
+            if rep["pages_lost"]:
+                score = rep["mean_evict_score"]
+                print(f"  slot {slot}: lost {rep['pages_lost']} pages / "
+                      f"{rep['tokens_lost']} tokens at {rep['positions']} "
+                      f"(mean victim score "
+                      f"{'n/a' if score is None else format(score, '.3g')})")
+    if args.regret_every:
+        for req in done:
+            summ = req.regret_summary()
+            if summ:
+                print(f"  req {req.request_id}: {summ['probes']} probes, "
+                      f"divergence mean={summ['mean_divergence']:.3g} "
+                      f"max={summ['max_divergence']:.3g}, evicted mass "
+                      f"mean={summ['mean_evicted_mass']:.3g}")
     eng.close()
     if not args.no_metrics:
         print(eng.obs.registry.render())

@@ -367,10 +367,17 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
                 policy: EvictionPolicy, ccfg: CacheConfig, decode_mask,
                 prefill_mask, reset_mask, share_src, share_pages,
                 use_pallas: bool = False, decode_splits: int = 1,
-                fused_scores: bool = False):
+                fused_scores: bool = False, want_taps: bool = False):
     """One layer of the unified step. x: (B, T, D); positions: (B, T) int32
-    with -1 past each row's ``n_tok``. Returns (x, LayerCaches)."""
+    with -1 past each row's ``n_tok``. Returns (x, LayerCaches, tap).
+
+    ``want_taps`` (static; obs/regret.py shadow probes) makes attention
+    layers also return a tap dict — the k/v written this step, the q used,
+    the attention output pre-projection, and the cache's live positions AT
+    ATTENTION TIME (post-append, pre-eviction). False (the default) returns
+    ``tap = None`` and traces HLO identical to the pre-taps code."""
     B, T, _ = x.shape
+    tap = None
     h = apply_norm(lp["norm1"], x)
     if spec.mixer == "attn":
         q, k, v = attn_mod.project_qkv(lp["attn"], cfg, h,
@@ -394,6 +401,9 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
             q, kvc, q_pos=positions, window=window, use_pallas=use_pallas,
             decode_splits=decode_splits,
             want_scores=fused_scores and use_pallas)
+        if want_taps:
+            tap = {"k": k, "v": v, "q": q, "o": o,
+                   "live_pos": kvc.pos_view()}
         # Alg.3 bookkeeping for decode rows, incremental Alg.2 compression
         # for rows that consumed a prompt chunk — disjoint masks, both
         # skipped via lax.cond when their mask is all-False. When the fused
@@ -444,7 +454,7 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
         h2 = apply_norm(lp["norm2"], x)
         mo = moe_forward_decode(lp["moe"], cfg, h2.reshape(B * T, -1))
         x = x + mo.reshape(B, T, -1)
-    return x, cache
+    return x, cache, tap
 
 
 def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
@@ -452,7 +462,7 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                  prefill_mask=None, reset_mask=None, share_src=None,
                  share_pages=None, ac: Callable = Identity,
                  use_pallas: bool = False, decode_splits: int = 1,
-                 fused_scores: bool = False):
+                 fused_scores: bool = False, want_taps: bool = False):
     """Unified mixed-batch step: up to T tokens per request in ONE program.
 
     tokens      : (B, T) int32 — row b's live tokens are tokens[b, :n_tok[b]]
@@ -483,8 +493,14 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                   off only to keep pallas-vs-ref comparisons exact on int8
                   (stored scores predate quantization).
 
-    Returns (logits (B, vocab) at each row's last live token, cache).
-    Rows with n_tok == 0 return logits of stale garbage — callers mask.
+    want_taps   : static (obs/regret.py): additionally return per-attention-
+                  layer taps {"k","v","q","o","live_pos"} — pattern-slot
+                  taps stacked over reps — plus the step's ``positions``.
+                  False leaves returns AND traced HLO unchanged.
+
+    Returns (logits (B, vocab) at each row's last live token, cache), plus
+    the taps dict when ``want_taps``. Rows with n_tok == 0 return logits of
+    stale garbage — callers mask.
     """
     x = embed_tokens(params, cfg, tokens)                   # (B, T, D)
     B, T = x.shape[0], x.shape[1]
@@ -508,34 +524,49 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
 
     def rep_body(x, xs):
         slot_params, slot_caches = xs
-        new_caches = []
+        new_caches, slot_taps = [], []
         for p in range(P):
-            x, c = _step_layer(slot_params[p], cfg, pat[p], ac(x),
-                               slot_caches[p], positions, n_tok, policy,
-                               ccfg, decode_mask, prefill_mask, reset_mask,
-                               share_src, share_pages, use_pallas,
-                               decode_splits, fused_scores)
+            x, c, tp = _step_layer(slot_params[p], cfg, pat[p], ac(x),
+                                   slot_caches[p], positions, n_tok, policy,
+                                   ccfg, decode_mask, prefill_mask,
+                                   reset_mask, share_src, share_pages,
+                                   use_pallas, decode_splits, fused_scores,
+                                   want_taps)
             new_caches.append(c)
+            slot_taps.append(tp)
+        if want_taps:
+            return x, (tuple(new_caches), tuple(slot_taps))
         return x, tuple(new_caches)
 
+    pattern_taps: list = []
     if params["pattern"]:
-        x, pattern_caches = lax.scan(
+        x, ys = lax.scan(
             rep_body, x, (tuple(params["pattern"]), tuple(cache.pattern)))
-        pattern_caches = list(pattern_caches)
+        if want_taps:
+            pattern_caches, pattern_taps = list(ys[0]), list(ys[1])
+        else:
+            pattern_caches = list(ys)
     else:
         pattern_caches = []
-    tail_caches = []
+    tail_caches, tail_taps = [], []
     for i, lp in enumerate(params["tail"]):
-        x, c = _step_layer(lp, cfg, pat[i], ac(x), cache.tail[i], positions,
-                           n_tok, policy, ccfg, decode_mask, prefill_mask,
-                           reset_mask, share_src, share_pages, use_pallas,
-                           decode_splits, fused_scores)
+        x, c, tp = _step_layer(lp, cfg, pat[i], ac(x), cache.tail[i],
+                               positions, n_tok, policy, ccfg, decode_mask,
+                               prefill_mask, reset_mask, share_src,
+                               share_pages, use_pallas, decode_splits,
+                               fused_scores, want_taps)
         tail_caches.append(c)
+        tail_taps.append(tp)
     last = jnp.maximum(n_tok - 1, 0)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
     logits = lm_logits(params, cfg, x_last)
-    return logits, ModelCache(pattern=pattern_caches, tail=tail_caches,
-                              cur_pos=cur_pos + n_tok)
+    out_cache = ModelCache(pattern=pattern_caches, tail=tail_caches,
+                           cur_pos=cur_pos + n_tok)
+    if want_taps:
+        taps = {"pattern": pattern_taps, "tail": tail_taps,
+                "positions": positions}
+        return logits, out_cache, taps
+    return logits, out_cache
 
 
 def collect_step_stats(cache: ModelCache):

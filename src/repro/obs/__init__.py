@@ -1,18 +1,28 @@
-"""Serving telemetry (DESIGN.md §9): metrics registry + per-step trace.
+"""Serving telemetry + forensics (DESIGN.md §9–§10).
 
-Three pieces, deliberately decoupled from each other and from the engine:
+Pieces, deliberately decoupled from each other and from the engine:
 
 - :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket latency
   histograms with real p50/p90/p99, snapshot-able to JSON and renderable
   as a text dashboard.
-- :mod:`repro.obs.trace` — buffered per-step JSONL trace (schema +
-  validator) and optional ``jax.profiler`` annotation scopes.
+- :mod:`repro.obs.trace` — buffered JSONL trace (schema v2: step / event /
+  probe records + version-dispatched validator) and optional
+  ``jax.profiler`` annotation scopes.
 - :mod:`repro.core.devstats` — the device half: the int32 stats vector
   the pool mutators accumulate inside the jitted step (no host callbacks
   on the hot path), reconciled into the registry once per step.
+- :mod:`repro.obs.timeline` — per-request span timelines exported as
+  Chrome-trace/Perfetto JSON (``serve.py --timeline``).
+- :mod:`repro.obs.lineage` — host-side page-lineage ledger: every page's
+  life, every request's eviction losses, reconciled exactly against
+  ``block_table``/``ref_count``.
+- :mod:`repro.obs.regret` — sampled eviction-regret shadow probes
+  (divergence vs an uncompressed shadow cache + attention mass on evicted
+  pages).
 
 ``ObsConfig`` is the single knob surface the engine takes; ``EngineObs``
-bundles the live registry + writer so ``Engine.step`` carries one handle.
+bundles the live registry + writer + forensics state so ``Engine.step``
+carries one handle.
 """
 from __future__ import annotations
 
@@ -20,13 +30,17 @@ from dataclasses import dataclass, field
 
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                LATENCY_BOUNDS_S)
-from repro.obs.trace import (TRACE_SCHEMA, TRACE_SCHEMA_VERSION, TraceWriter,
-                             annotation, validate_event, validate_file)
+from repro.obs.trace import (TRACE_SCHEMA, TRACE_SCHEMA_V1,
+                             TRACE_SCHEMA_VERSION, TraceWriter, annotation,
+                             validate_event, validate_file)
+from repro.obs.timeline import TimelineRecorder
+from repro.obs.lineage import PageLineageLedger, StepPlanContext
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "LATENCY_BOUNDS_S",
-    "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "TraceWriter", "annotation",
-    "validate_event", "validate_file", "ObsConfig", "EngineObs",
+    "TRACE_SCHEMA", "TRACE_SCHEMA_V1", "TRACE_SCHEMA_VERSION", "TraceWriter",
+    "annotation", "validate_event", "validate_file", "ObsConfig",
+    "EngineObs", "TimelineRecorder", "PageLineageLedger", "StepPlanContext",
 ]
 
 
@@ -36,21 +50,35 @@ class ObsConfig:
 
     metrics      : host registry + device stats vector (the ≤2%-overhead
                    default-on path — BENCH_obs.json gates it)
-    trace_path   : write one JSONL event per step here (None == no trace)
+    trace_path   : write one JSONL record per step here (None == no trace);
+                   lineage events and regret probes also land on this
+                   stream when enabled
     profiler_annotations : wrap plan/step in jax.profiler.TraceAnnotation
                    scopes (off by default; only useful under a profiler)
     program_ceiling : compiled-program count the engine expects at steady
                    state; crossing it flips the unexpected_compile flag on
                    that step's trace event and bumps the sentinel counter
+    timeline     : record per-request span timelines (queue / prefill
+                   chunks / decode / instants) for Perfetto export
+    lineage      : host-side page-lineage ledger over the first attention
+                   layer (one extra jitted snapshot gather per step)
+    regret_every : probe eviction regret on every Nth decode step of each
+                   request (0 == off). NONZERO recompiles the step with
+                   per-layer taps and transfers them every step — a
+                   forensics mode, not a serving default.
     """
     metrics: bool = True
     trace_path: str | None = None
     profiler_annotations: bool = False
     program_ceiling: int = 2
+    timeline: bool = False
+    lineage: bool = False
+    regret_every: int = 0
 
     @property
     def enabled(self) -> bool:
-        return self.metrics or self.trace_path is not None
+        return (self.metrics or self.trace_path is not None or self.timeline
+                or self.lineage or self.regret_every > 0)
 
 
 @dataclass
@@ -59,10 +87,16 @@ class EngineObs:
     cfg: ObsConfig
     registry: MetricsRegistry = field(default_factory=MetricsRegistry)
     writer: TraceWriter | None = None
+    timeline: TimelineRecorder | None = None
+    ledger: PageLineageLedger | None = None
 
     def __post_init__(self):
         if self.cfg.trace_path and self.writer is None:
             self.writer = TraceWriter(self.cfg.trace_path)
+        if self.cfg.timeline and self.timeline is None:
+            self.timeline = TimelineRecorder()
+        if self.cfg.lineage and self.ledger is None:
+            self.ledger = PageLineageLedger(layer=0)
 
     def close(self) -> None:
         if self.writer is not None:

@@ -1,14 +1,31 @@
-"""Structured per-step trace: buffered JSONL writer + schema + profiler scopes.
+"""Structured trace: buffered JSONL writer + versioned schema + profiler scopes.
 
-One event per ``Engine.step`` iteration. Events are flat JSON objects so
-any tool (jq, pandas, ``benchmarks/roofline.py --obs``) can consume them
-without a reader library; the schema below is the contract and
-:func:`validate_event` enforces it (tests + the CI trace step call it).
+Schema **v2** (this file) carries three record kinds on one stream,
+discriminated by the required ``rec`` field:
+
+- ``rec == "step"``  — one per ``Engine.step`` iteration (same shape as the
+  v1 flat event, plus ``rec``).
+- ``rec == "event"`` — one per page-lineage mutation (alloc / adopt / fork /
+  evict / release) observed on the tracked attention layer, with the
+  physical page id, owner slot, logical page index, and the policy score
+  at eviction (``obs/lineage.py`` consumes these).
+- ``rec == "probe"`` — one per sampled eviction-regret shadow probe
+  (``obs/regret.py``): per-layer output divergence vs an uncompressed
+  shadow cache and the attention mass attributable to evicted pages.
+
+Records are flat JSON objects so any tool (jq, pandas,
+``benchmarks/roofline.py --obs``) can consume them without a reader
+library. :func:`validate_event` / :func:`validate_file` are the contract
+and version-dispatch: **v1 files stay valid** (a v1 record has ``v == 1``
+and no ``rec``; tests pin this on a checked-in fixture).
 
 The writer buffers ``flush_every`` encoded lines before touching the file
-so the hot path pays one json.dumps per step and an amortized write —
-never an fsync. Use as a context manager or call close(); atexit is NOT
-installed (serving drivers own their shutdown order).
+so the hot path pays one json.dumps per record and an amortized write —
+never an fsync. Crash safety: the writer registers an ``atexit`` fallback
+at construction (unregistered on close) so an unhandled exception or
+normal interpreter exit still lands the buffered tail; the engine loop
+additionally flushes on error. SIGKILL can still lose at most
+``flush_every - 1`` records — by design (no fsync on the hot path).
 
 ``annotation(name)`` wraps a host region in ``jax.profiler.TraceAnnotation``
 when profiler annotations are enabled AND the jax build has them —
@@ -17,15 +34,21 @@ otherwise it is a zero-cost nullcontext, so the engine can always write
 """
 from __future__ import annotations
 
+import atexit
 import contextlib
 import json
 from typing import IO
 
-# Trace event schema, version 1. field -> (type(s), required).
-# Integer counter fields are per-STEP deltas (device stats vector summed
-# over layers), not running totals; *_ms are host wall-clock milliseconds.
-TRACE_SCHEMA_VERSION = 1
-TRACE_SCHEMA: dict = {
+TRACE_SCHEMA_VERSION = 2
+
+# ---------------------------------------------------------------------------
+# schemas: field -> (type(s), required)
+# ---------------------------------------------------------------------------
+
+# v1 step event (PR 8). Integer counter fields are per-STEP deltas (device
+# stats vector summed over layers), not running totals; *_ms are host
+# wall-clock milliseconds. Kept verbatim for back-compat validation.
+TRACE_SCHEMA_V1: dict = {
     "v": (int, True),               # schema version
     "step": (int, True),            # engine step counter at emission
                                     # (monotonic, 1-based after each step)
@@ -54,13 +77,58 @@ TRACE_SCHEMA: dict = {
     "finished": (int, True),        # requests retired this step
 }
 
+# v2 step record: v1 shape + the "rec" discriminator.
+TRACE_STEP_SCHEMA: dict = dict(TRACE_SCHEMA_V1, rec=(str, True))
 
-def validate_event(ev: dict) -> list:
-    """Return a list of schema violations (empty == valid)."""
+# v2 page-lineage event record. One per mutation of the tracked attention
+# layer's page pool, derived host-side (engine snapshot diff + step plan).
+TRACE_EVENT_SCHEMA: dict = {
+    "v": (int, True),
+    "rec": (str, True),
+    "step": (int, True),            # engine step the mutation landed on
+    "etype": (str, True),           # alloc | adopt | fork | evict | release
+    "page": (int, True),            # physical page id in the pool
+    "slot": (int, True),            # owner batch slot (request row)
+    "lpi": (int, True),             # logical page index within the row
+    "layer": (int, False),          # tracked attention layer index
+    "src_page": (int, False),       # fork: physical source page copied from
+    "src_slot": (int, False),       # adopt: source row the prefix came from
+    "score": (float, False),        # policy score at eviction (evict only)
+    "tokens": (int, False),         # tokens live on the page at event time
+    "pos": (int, False),            # first token position on the page
+}
+
+# v2 regret-probe record. One per sampled shadow probe (obs/regret.py):
+# lists are per-transformer-layer, index 0 == first attention layer.
+TRACE_PROBE_SCHEMA: dict = {
+    "v": (int, True),
+    "rec": (str, True),
+    "step": (int, True),
+    "slot": (int, True),            # probed batch slot
+    "request_id": (str, False),
+    "pos": (int, True),             # token position probed (row's last live)
+    "divergence": (list, True),     # per-layer relative L2 of attn output
+    "evicted_mass": (list, True),   # per-layer shadow attn mass on evicted
+                                    # positions (0..1)
+    "tokens_evicted": (int, False), # positions missing from the pruned row
+}
+
+# Back-compat alias: TRACE_SCHEMA has meant "the step-event schema" since
+# PR 8; keep it pointing at the current step-record shape.
+TRACE_SCHEMA = TRACE_STEP_SCHEMA
+
+_V2_SCHEMAS = {
+    "step": TRACE_STEP_SCHEMA,
+    "event": TRACE_EVENT_SCHEMA,
+    "probe": TRACE_PROBE_SCHEMA,
+}
+_STEP_KINDS = ("decode", "mixed", "prefill", "idle")
+_EVENT_TYPES = ("alloc", "adopt", "fork", "evict", "release")
+
+
+def _check_fields(ev: dict, schema: dict) -> list:
     errs = []
-    if not isinstance(ev, dict):
-        return [f"event is {type(ev).__name__}, not object"]
-    for key, (typ, required) in TRACE_SCHEMA.items():
+    for key, (typ, required) in schema.items():
         if key not in ev:
             if required:
                 errs.append(f"missing required field {key!r}")
@@ -73,18 +141,42 @@ def validate_event(ev: dict) -> list:
             errs.append(f"{key!r}: expected {typ.__name__}, "
                         f"got {type(val).__name__}")
     for key in ev:
-        if key not in TRACE_SCHEMA:
+        if key not in schema:
             errs.append(f"unknown field {key!r}")
-    if ev.get("v") not in (None, TRACE_SCHEMA_VERSION):
-        errs.append(f"schema version {ev.get('v')} != {TRACE_SCHEMA_VERSION}")
-    if ev.get("kind") not in (None, "decode", "mixed", "prefill", "idle"):
+    return errs
+
+
+def validate_event(ev: dict) -> list:
+    """Return a list of schema violations (empty == valid).
+
+    Version-dispatched: ``v == 1`` (or absent, for pre-versioned files)
+    validates against the v1 step schema; ``v == 2`` dispatches on ``rec``.
+    """
+    if not isinstance(ev, dict):
+        return [f"event is {type(ev).__name__}, not object"]
+    v = ev.get("v", 1)
+    if v == 1:
+        errs = _check_fields(ev, TRACE_SCHEMA_V1)
+        if ev.get("kind") not in (None,) + _STEP_KINDS:
+            errs.append(f"bad kind {ev.get('kind')!r}")
+        return errs
+    if v != TRACE_SCHEMA_VERSION:
+        return [f"schema version {v!r} not in (1, {TRACE_SCHEMA_VERSION})"]
+    rec = ev.get("rec")
+    schema = _V2_SCHEMAS.get(rec)
+    if schema is None:
+        return [f"bad rec {rec!r} (want one of {sorted(_V2_SCHEMAS)})"]
+    errs = _check_fields(ev, schema)
+    if rec == "step" and ev.get("kind") not in (None,) + _STEP_KINDS:
         errs.append(f"bad kind {ev.get('kind')!r}")
+    if rec == "event" and ev.get("etype") not in (None,) + _EVENT_TYPES:
+        errs.append(f"bad etype {ev.get('etype')!r}")
     return errs
 
 
 def validate_file(path: str, max_errors: int = 20) -> list:
-    """Validate every line of a JSONL trace; returns violations with line
-    numbers (empty == valid file)."""
+    """Validate every line of a JSONL trace (v1 or v2); returns violations
+    with line numbers (empty == valid file)."""
     errs = []
     with open(path) as f:
         n = -1
@@ -106,7 +198,12 @@ def validate_file(path: str, max_errors: int = 20) -> list:
 
 class TraceWriter:
     """Buffered JSONL sink. ``emit`` encodes and appends to an in-memory
-    list; the file is written every ``flush_every`` events and on close."""
+    list; the file is written every ``flush_every`` events and on close.
+
+    An ``atexit`` hook (installed at construction, removed on close) flushes
+    the tail if the process exits — cleanly or via unhandled exception —
+    without the owner calling ``close()``. Idempotent: double-close and
+    close-after-atexit are no-ops."""
 
     def __init__(self, path: str, flush_every: int = 64):
         self.path = path
@@ -114,6 +211,7 @@ class TraceWriter:
         self.events_written = 0
         self._buf: list = []
         self._f: IO | None = open(path, "w")
+        atexit.register(self.close)
 
     def emit(self, ev: dict) -> None:
         if self._f is None:
@@ -126,6 +224,7 @@ class TraceWriter:
     def flush(self) -> None:
         if self._buf and self._f is not None:
             self._f.write("\n".join(self._buf) + "\n")
+            self._f.flush()
             self._buf.clear()
 
     def close(self) -> None:
@@ -133,6 +232,8 @@ class TraceWriter:
             self.flush()
             self._f.close()
             self._f = None
+            with contextlib.suppress(Exception):
+                atexit.unregister(self.close)
 
     def __enter__(self):
         return self
@@ -165,9 +266,15 @@ def main(argv=None) -> int:
         for e in errs:
             print(f"INVALID {args.path}: {e}")
         return 1
+    counts: dict = {}
     with open(args.path) as f:
-        n = sum(1 for _ in f)
-    print(f"OK {args.path}: {n} events, schema v{TRACE_SCHEMA_VERSION}")
+        for line in f:
+            ev = json.loads(line)
+            key = f"v{ev.get('v', 1)}:{ev.get('rec', 'step')}"
+            counts[key] = counts.get(key, 0) + 1
+    total = sum(counts.values())
+    mix = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"OK {args.path}: {total} records ({mix})")
     return 0
 
 

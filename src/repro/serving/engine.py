@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.configs.base import CacheConfig, ModelConfig
 from repro.core import devstats
+from repro.core.paged_cache import lineage_snapshot
 from repro.core.policies import EvictionPolicy, get_policy
 from repro.models.transformer import (
     ModelCache,
@@ -59,6 +60,9 @@ from repro.models.transformer import (
     intact_prefix_pages,
 )
 from repro.obs import EngineObs, ObsConfig
+from repro.obs.lineage import StepPlanContext
+from repro.obs.regret import (REGRET_BOUNDS, ShadowState, probe_record,
+                              run_probe)
 from repro.obs.trace import TRACE_SCHEMA_VERSION, annotation
 from repro.serving.request import Request, RequestStatus, SamplingParams
 from repro.serving.sampler import sample_tokens
@@ -133,6 +137,13 @@ class Engine:
         self._t_start = time.perf_counter()
         self._programs_seen = 0
         self._warned_compile = False
+        # forensics (DESIGN.md §10): per-request timeline hooks, lineage
+        # snapshot function, and the regret shadow cache. ``_want_taps`` is
+        # python-static — False compiles the exact pre-forensics program.
+        self._want_taps = self.obs.cfg.regret_every > 0
+        self._shadow: ShadowState | None = None
+        if self.obs.timeline is not None:
+            self.scheduler.on_admit = self._on_admit
 
         # batch-wide state (block tables carry chunk headroom: a prefilling
         # row transiently holds budget + chunk tokens between boundaries)
@@ -158,6 +169,23 @@ class Engine:
 
         self._step_fn = jax.jit(self._step_impl)
         self._probe_fn = jax.jit(intact_prefix_pages)
+        # lineage ledger: one jitted gather of the FIRST attention layer's
+        # pool view per step (block table, ref counts, per-page tokens /
+        # base positions / policy scores)
+        self._lineage_fn = (jax.jit(self._lineage_impl)
+                            if self.obs.ledger is not None else None)
+
+    @staticmethod
+    def _lineage_impl(cache: ModelCache):
+        for lc in cache.pattern:
+            if lc.kv is not None:
+                # stacked pattern slots: rep 0 is the first attention layer
+                return lineage_snapshot(
+                    jax.tree.map(lambda a: a[0], lc.kv))
+        for lc in cache.tail:
+            if lc.kv is not None:
+                return lineage_snapshot(lc.kv)
+        return None
 
     # ---------------------------------------------------------------- jitted
     def _step_impl(self, params, tokens, n_tok, decode_mask, prefill_mask,
@@ -170,17 +198,25 @@ class Engine:
         int32, this step's pool events across every attention layer), or
         None when the caches don't track stats — summing happens INSIDE the
         jit so telemetry costs one reduction + one tiny transfer, never a
-        host callback."""
-        logits, cache = forward_step(
+        host callback.
+
+        Fourth output: the regret-probe taps (per-attention-layer k/v/q/o +
+        live positions; obs/regret.py), or None when probes are off —
+        ``_want_taps`` is static, so the probes-off program is bit-identical
+        to the never-instrumented one."""
+        out = forward_step(
             params, self.cfg, tokens, n_tok, cache, self.policy, self.ccfg,
             decode_mask=decode_mask, prefill_mask=prefill_mask,
             reset_mask=reset_mask, share_src=share_src,
             share_pages=share_pages, use_pallas=self.use_pallas,
-            decode_splits=self.decode_splits, fused_scores=self.fused_scores)
+            decode_splits=self.decode_splits, fused_scores=self.fused_scores,
+            want_taps=self._want_taps)
+        logits, cache = out[0], out[1]
+        taps = out[2] if self._want_taps else None
         s = self.sampling
         next_tok = sample_tokens(key, logits, temperature=s.temperature,
                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
-        return next_tok, cache, collect_step_stats(cache)
+        return next_tok, cache, collect_step_stats(cache), taps
 
     def _prefix_probe(self, slot: int) -> int:
         """Device half of prefix-sharing admission (scheduler callback):
@@ -199,7 +235,19 @@ class Engine:
                       eos_token_id=eos_token_id)
         self._next_id += 1
         self.scheduler.add(req)
+        if self.obs.timeline is not None:
+            self.obs.timeline.request_submitted(req.request_id,
+                                                time.perf_counter())
         return req
+
+    def _on_admit(self, slot: int, req: Request) -> None:
+        """Scheduler admission hook → timeline (queue span ends here)."""
+        self.obs.timeline.request_admitted(
+            req.request_id, req.admission_time, slot=slot,
+            shared_tokens=req.shared_tokens,
+            shared_pages=(req.shared_tokens // self.ccfg.page_size
+                          if req.shared_tokens else 0),
+            prompt_tokens=len(req.prompt))
 
     def _maybe_finish(self, req: Request) -> None:
         last = req.output_tokens[-1] if req.output_tokens else None
@@ -208,6 +256,10 @@ class Engine:
         elif req.num_generated >= req.max_new_tokens:
             req.status = RequestStatus.FINISHED_LENGTH
         if req.finished:
+            if self.obs.timeline is not None:
+                self.obs.timeline.request_finished(
+                    req.request_id, time.perf_counter(),
+                    tokens=req.num_generated, reason=req.status.value)
             self.scheduler.retire(req)
             if self.obs.cfg.metrics:
                 reg = self.obs.registry
@@ -243,6 +295,7 @@ class Engine:
                     tokens: int, st, finished: int, unexpected: bool) -> None:
         ev = {
             "v": TRACE_SCHEMA_VERSION,
+            "rec": "step",
             "step": self.stats.steps,
             "kind": kind,
             "t_ms": (time.perf_counter() - self._t_start) * 1e3,
@@ -307,7 +360,7 @@ class Engine:
         t0 = time.perf_counter()
         self._key, sk = jax.random.split(self._key)
         with annotation("engine.step", enabled=oc.profiler_annotations):
-            next_tok, self.cache, stats_dev = self._step_fn(
+            next_tok, self.cache, stats_dev, taps = self._step_fn(
                 self.params, jnp.asarray(tokens), jnp.asarray(n_tok),
                 jnp.asarray(decode_mask), jnp.asarray(prefill_mask),
                 jnp.asarray(reset_mask), jnp.asarray(share_src),
@@ -332,6 +385,46 @@ class Engine:
             self.stats.forced_evictions += int(st[devstats.FORCED_EVICTIONS])
             self._free_pages_est += int(st[devstats.PAGES_FREED]) - \
                 int(st[devstats.PAGES_ALLOCATED])
+
+        # forensics (DESIGN.md §10) — all host-side, plan-contextualized.
+        # Runs BEFORE the finish loops below so slot -> request attribution
+        # still sees this step's owners.
+        step_no = self.stats.steps
+        lin_events = []
+        if self.obs.ledger is not None:
+            snap = jax.device_get(self._lineage_fn(self.cache))
+            ctx = StepPlanContext(
+                reset_slots=frozenset(plan.reset),
+                adopt={slot: (src, n_pages)
+                       for slot, src, n_pages in plan.adopt})
+            lin_events = self.obs.ledger.observe_step(step_no, snap, ctx)
+            if self.obs.writer is not None:
+                for evn in lin_events:
+                    self.obs.writer.emit(evn.to_record())
+        if taps is not None:
+            self._observe_regret(plan, taps, n_tok, step_no)
+        tl = self.obs.timeline
+        if tl is not None:
+            kind_tl = "mixed" if (plan.prefill and plan.decode) else (
+                "prefill" if plan.prefill else "decode")
+            tl.engine_step(step_no, kind_tl, t0, dt,
+                           tokens=int(n_tok.sum()))
+            for slot, req in plan.decode:
+                tl.decode_step(req.request_id, t0)
+            for slot, req, chunk, _ in plan.prefill:
+                tl.prefill_chunk(req.request_id, t0, t0 + dt,
+                                 tokens=len(chunk), step=step_no)
+            if st is not None and int(st[devstats.PAGES_EVICTED]) > 0:
+                tl.engine_instant(now, "pages_evicted",
+                                  count=int(st[devstats.PAGES_EVICTED]))
+            for evn in lin_events:
+                if evn.etype == "evict":
+                    owner = self.scheduler.slots[evn.slot]
+                    if owner is not None:
+                        tl.request_evicted_page(owner.request_id, now,
+                                                page=evn.page, lpi=evn.lpi,
+                                                score=evn.score)
+
         reg = self.obs.registry if oc.metrics else None
         if reg is not None:
             reg.histogram("engine.step_wall_s").observe(dt)
@@ -382,10 +475,72 @@ class Engine:
                              unexpected)
         return self.scheduler.has_work()
 
+    def _observe_regret(self, plan, taps, n_tok, step_no: int) -> None:
+        """Shadow-probe bookkeeping (obs/regret.py): device taps → host
+        shadow history mirroring the pool's lifecycle, then a sampled
+        full-cache recompute on this step's flagged decode rows."""
+        taps = jax.device_get(taps)
+        layers = []
+        for tp in taps["pattern"]:
+            if tp is None:
+                continue
+            reps = tp["k"].shape[0]        # stacked over pattern repetitions
+            for r in range(reps):
+                layers.append({k: v[r] for k, v in tp.items()})
+        layers += [tp for tp in taps["tail"] if tp is not None]
+        if not layers:
+            return
+        positions = np.asarray(taps["positions"])
+        if self._shadow is None:
+            KV, hd = layers[0]["k"].shape[-2:]
+            self._shadow = ShadowState(len(layers), self.max_batch,
+                                       self.total_len, KV, hd)
+        sh = self._shadow
+        for slot in plan.reset:
+            sh.reset_row(slot)
+        for slot, src, n_pages in plan.adopt:
+            sh.adopt(slot, src, n_pages * self.ccfg.page_size)
+        sh.record_step(layers, positions, n_tok)
+        every = self.obs.cfg.regret_every
+        rows, by_slot = [], {}
+        for slot, req in plan.decode:
+            if req.probe and len(req.decode_times) % every == 0:
+                rows.append(slot)
+                by_slot[slot] = req
+        if not rows:
+            return
+        reg = self.obs.registry if self.obs.cfg.metrics else None
+        for s in run_probe(sh, layers, positions, n_tok, rows):
+            req = by_slot[s["slot"]]
+            req.regret_samples.append(s)
+            if self.obs.writer is not None:
+                self.obs.writer.emit(probe_record(
+                    s, step=step_no, request_id=req.request_id))
+            if reg is not None:
+                reg.histogram("engine.eviction_regret",
+                              bounds=REGRET_BOUNDS).observe(
+                                  float(np.mean(s["divergence"])))
+                reg.histogram("engine.evicted_attention_mass",
+                              bounds=REGRET_BOUNDS).observe(
+                                  float(np.mean(s["evicted_mass"])))
+
+    def shadow_nbytes(self) -> int:
+        """Host bytes held by the regret shadow cache (0 when probes off)."""
+        return self._shadow.nbytes() if self._shadow is not None else 0
+
     def run(self, max_steps: int = 100_000) -> list[Request]:
+        """Drive :meth:`step` to completion. Crash safety: an exception
+        anywhere in the loop flushes the buffered trace tail before
+        propagating, so the trace ends at the failing step — plus the
+        writer's own atexit fallback for exits that bypass this frame."""
         steps = 0
-        while self.step() and steps < max_steps:
-            steps += 1
+        try:
+            while self.step() and steps < max_steps:
+                steps += 1
+        except BaseException:
+            if self.obs.writer is not None:
+                self.obs.writer.flush()
+            raise
         return self.scheduler.finished
 
     def num_compiled_programs(self) -> int:
@@ -403,6 +558,19 @@ class Engine:
     def close(self) -> None:
         """Flush and close the trace writer (idempotent)."""
         self.obs.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def export_timeline(self, path: str) -> int:
+        """Write the per-request Perfetto/Chrome-trace timeline; returns the
+        event count. Requires ``ObsConfig(timeline=True)``."""
+        if self.obs.timeline is None:
+            raise ValueError("engine was not run with ObsConfig(timeline=True)")
+        return self.obs.timeline.export(path)
 
     def pool_stats(self) -> dict:
         """Fleet-level page-pool occupancy, aggregated over attention layers:

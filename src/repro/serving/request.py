@@ -55,6 +55,21 @@ class Request:
                                             # chunks — adopted pages cost no
                                             # prefill compute)
     decode_times: list[float] = field(default_factory=list)
+    probe: bool = True                      # eligible for eviction-regret
+                                            # shadow probes (only sampled
+                                            # when the engine runs with
+                                            # ObsConfig.regret_every > 0)
+    regret_samples: list[dict] = field(default_factory=list)
+                                            # one dict per shadow probe:
+                                            # per-layer divergence +
+                                            # evicted attention mass
+                                            # (obs/regret.py)
+
+    def regret_summary(self) -> dict | None:
+        """Aggregate this request's shadow-probe samples (None if never
+        probed); see ``repro.obs.regret.summarize_request``."""
+        from repro.obs.regret import summarize_request
+        return summarize_request(self.regret_samples)
 
     @property
     def num_generated(self) -> int:

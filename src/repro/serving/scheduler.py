@@ -147,6 +147,10 @@ class Scheduler:
         # probe (slot -> intact prefix pages). None == sharing disabled.
         self.prefix_index = RadixPrefixIndex(page_size) if page_size else None
         self.prefix_probe = prefix_probe
+        # admission hook: called as on_admit(slot, req) the moment a request
+        # is assigned a batch slot (the engine wires this to the per-request
+        # timeline recorder; None == no observer)
+        self.on_admit = None
 
     # ------------------------------------------------------------------ api
     def add(self, req: Request) -> None:
@@ -216,6 +220,8 @@ class Scheduler:
             stale.add(slot)
             if self.prefix_index is not None:
                 self.prefix_index.insert(slot, req.prompt)
+            if self.on_admit is not None:
+                self.on_admit(slot, req)
             admitted.append((slot, req))
         return admitted
 

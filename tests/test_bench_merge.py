@@ -1,0 +1,59 @@
+"""BENCH artifact merge semantics (benchmarks/common.merge_json).
+
+latency.py, throughput.py and accuracy.py --regret all land sections in
+one BENCH_latency.json — each writer must merge its key without
+clobbering the others', and a corrupt/partial existing file must degrade
+to a fresh object instead of crashing the benchmark run.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import merge_json  # noqa: E402
+
+
+def test_merge_creates_and_preserves(tmp_path):
+    p = tmp_path / "BENCH_latency.json"
+    merge_json(p, "tpot_ms", {"paged_eviction": 1.5})
+    merge_json(p, "throughput_percentiles", {"p50": 2.0})
+    out = json.loads(p.read_text())
+    assert out == {"tpot_ms": {"paged_eviction": 1.5},
+                   "throughput_percentiles": {"p50": 2.0}}
+    # re-landing a section replaces only that section
+    merge_json(p, "tpot_ms", {"paged_eviction": 1.2, "full": 1.0})
+    out = json.loads(p.read_text())
+    assert out["tpot_ms"] == {"paged_eviction": 1.2, "full": 1.0}
+    assert out["throughput_percentiles"] == {"p50": 2.0}
+
+
+def test_merge_survives_corrupt_existing_file(tmp_path):
+    p = tmp_path / "BENCH_latency.json"
+    p.write_text('{"tpot_ms": {bad json')          # truncated write
+    merge_json(p, "regret", {"probes": 4})
+    assert json.loads(p.read_text()) == {"regret": {"probes": 4}}
+
+
+def test_merge_survives_non_object_existing_file(tmp_path):
+    p = tmp_path / "BENCH_latency.json"
+    p.write_text("[1, 2, 3]\n")                    # valid JSON, wrong shape
+    merge_json(p, "setup", {"arch": "qwen2.5-3b"})
+    assert json.loads(p.read_text()) == {"setup": {"arch": "qwen2.5-3b"}}
+
+
+def test_merge_survives_empty_file(tmp_path):
+    p = tmp_path / "BENCH_latency.json"
+    p.write_text("")
+    merge_json(p, "a", 1)
+    merge_json(p, "b", None)                       # null values are kept
+    assert json.loads(p.read_text()) == {"a": 1, "b": None}
+
+
+def test_merge_output_is_valid_json_with_trailing_newline(tmp_path):
+    p = tmp_path / "BENCH_latency.json"
+    merge_json(p, "k", {"nested": [1, 2]})
+    text = p.read_text()
+    assert text.endswith("\n")
+    assert json.loads(text) == {"k": {"nested": [1, 2]}}

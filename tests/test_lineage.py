@@ -1,0 +1,181 @@
+"""Page-lineage ledger (repro.obs.lineage; DESIGN.md §10).
+
+The contract under test: diffing per-step device snapshots of the tracked
+attention layer, the ledger's replayed block table and derived ref counts
+reconcile EXACTLY with the device state after EVERY step of a churned
+workload (shared-prefix adoptions, CoW forks, page evictions, retirements
+and slot reuse). Count cross-checks against the devstats vector are
+inequalities (within-step churn and multi-layer totals), state
+reconciliation is the exact gate.
+
+Also: event-record round-trip through the v2 trace schema, offline ledger
+reconstruction from a trace file, and the per-request loss report.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.models import init_model
+from repro.obs import ObsConfig, PageLineageLedger, StepPlanContext
+from repro.obs.lineage import PageEvent
+from repro.obs.trace import validate_event, validate_file
+from repro.serving import Engine, SamplingParams
+
+
+def _engine(policy="paged_eviction", budget=32, trace=None, max_batch=3,
+            new_tokens=8):
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=budget, policy=policy,
+                       dtype="float32")
+    return Engine(cfg, params, cache_cfg=ccfg, max_batch=max_batch,
+                  max_prompt_len=48, max_new_tokens=new_tokens,
+                  sampling=SamplingParams(greedy=True), chunk_size=16,
+                  obs=ObsConfig(lineage=True, trace_path=trace))
+
+
+def _churned_run(eng, *, check_every_step=True, seed=7, n_reqs=6):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, eng.cfg.vocab_size, size=24)
+    for _ in range(n_reqs):
+        tail = rng.integers(0, eng.cfg.vocab_size,
+                            size=int(rng.integers(6, 20)))
+        eng.submit(np.concatenate([prefix, tail]).astype(np.int32))
+    steps = 0
+    while eng.step() and steps < 300:
+        steps += 1
+        if check_every_step:
+            snap = jax.device_get(eng._lineage_fn(eng.cache))
+            assert eng.obs.ledger.reconcile(snap) == [], f"step {steps}"
+    assert len(eng.scheduler.finished) == n_reqs
+    return steps
+
+
+@pytest.mark.parametrize("policy", ["paged_eviction", "streaming_llm"])
+def test_ledger_reconciles_every_step(policy):
+    """Exact block-table + ref-count agreement after every step, for both a
+    page policy (evict + rollover recycling, the hard case) and a token
+    policy (CoW forks under eviction)."""
+    eng = _engine(policy)
+    _churned_run(eng)
+    counts = eng.obs.ledger.counts()
+    assert counts.get("adopt", 0) > 0, "workload never exercised adoption"
+    assert counts.get("release", 0) > 0, "retirement never released pages"
+    if policy == "paged_eviction":
+        assert counts.get("evict", 0) > 0, "no evictions under pressure"
+    else:
+        assert counts.get("fork", 0) > 0, \
+            "token eviction on shared pages must CoW-fork"
+
+
+def test_ledger_counts_bounded_by_devstats():
+    """The tracked layer's event counts cannot exceed the fleet-wide
+    devstats totals (which sum every layer's churn)."""
+    eng = _engine("paged_eviction")
+    _churned_run(eng, check_every_step=False)
+    counts = eng.obs.ledger.counts()
+    reg = eng.obs.registry
+    assert counts.get("evict", 0) <= reg.counter("pool.pages_evicted").value
+    assert counts.get("adopt", 0) <= reg.counter("pool.pages_adopted").value
+    assert counts.get("fork", 0) <= reg.counter("pool.pages_forked").value
+
+
+def test_evict_events_carry_policy_scores():
+    """Every paged_eviction victim is priced: the event records the victim
+    page's policy score from the pre-step snapshot, plus the tokens and
+    base position lost."""
+    eng = _engine("paged_eviction")
+    _churned_run(eng, check_every_step=False)
+    evicts = [ev for ev in eng.obs.ledger.events if ev.etype == "evict"]
+    assert evicts
+    scored = [ev for ev in evicts if ev.score is not None]
+    assert scored, "no evict event carried a policy score"
+    for ev in scored:
+        assert np.isfinite(ev.score)
+        assert ev.tokens is not None and ev.tokens >= 0
+    # loss report over the slots that lost pages
+    slots = {ev.slot for ev in evicts}
+    total = 0
+    for slot in slots:
+        rep = eng.obs.ledger.request_loss_report(slot)
+        total += rep["pages_lost"]
+        assert rep["tokens_lost"] >= 0
+        for lo, hi in rep["positions"]:
+            assert 0 <= lo <= hi
+        if rep["mean_evict_score"] is not None:
+            assert np.isfinite(rep["mean_evict_score"])
+    assert total == len(evicts)
+
+
+def test_page_history_tracks_reuse():
+    """A physical page's history spans owners: after a release the same
+    page id may be re-allocated to another slot — the history lists both
+    lives in step order."""
+    eng = _engine("paged_eviction")
+    _churned_run(eng, check_every_step=False)
+    led = eng.obs.ledger
+    pages = {ev.page for ev in led.events}
+    reused = [g for g in pages
+              if len([e for e in led.page_history(g)
+                      if e.etype in ("alloc", "adopt")]) > 1]
+    assert reused, "6 requests through 3 slots never reused a page"
+    hist = led.page_history(reused[0])
+    assert [e.step for e in hist] == sorted(e.step for e in hist)
+
+
+def test_event_records_validate_and_roundtrip():
+    ev = PageEvent(step=3, etype="evict", page=7, slot=1, lpi=2, score=0.25,
+                   tokens=8, pos=16)
+    rec = ev.to_record()
+    assert validate_event(rec) == []
+    assert PageEvent.from_record(rec) == ev
+    assert validate_event(dict(rec, etype="bogus"))
+    assert validate_event(dict(rec, score="high"))
+
+
+def test_ledger_rebuild_from_trace(tmp_path):
+    """Offline forensics: the v2 event records written into the trace are
+    sufficient to rebuild the ledger — same final block table, same event
+    counts, same loss reports — with no device access."""
+    trace = tmp_path / "t.jsonl"
+    eng = _engine("paged_eviction", trace=str(trace))
+    _churned_run(eng, check_every_step=False)
+    eng.close()
+    assert validate_file(str(trace)) == []
+    live = eng.obs.ledger
+    B, P = live.replayed_block_table().shape
+    rebuilt = PageLineageLedger.from_trace(
+        str(trace), batch=B, num_pages=P, pool_pages=live._pool_pages)
+    assert np.array_equal(rebuilt.replayed_block_table(),
+                          live.replayed_block_table())
+    assert np.array_equal(rebuilt.replayed_ref_count(),
+                          live.replayed_ref_count())
+    assert rebuilt.counts() == live.counts()
+    for slot in range(B):
+        a = rebuilt.request_loss_report(slot)
+        b = live.request_loss_report(slot)
+        assert (a["pages_lost"], a["tokens_lost"], a["positions"]) \
+            == (b["pages_lost"], b["tokens_lost"], b["positions"])
+    # the trace interleaves step + event records on one stream
+    recs = [json.loads(ln) for ln in trace.read_text().splitlines()]
+    kinds = {r.get("rec") for r in recs}
+    assert kinds == {"step", "event"}
+
+
+def test_reconcile_reports_mismatches():
+    led = PageLineageLedger()
+    snap = {"block_table": np.array([[0, -1]]), "ref_count": np.array([1, 0]),
+            "cur_page": np.array([0]), "tokens_per_page": np.array([[3, 0]]),
+            "page_scores": np.array([[0.5, np.inf]]),
+            "pos_base": np.array([[0, -1]])}
+    assert led.reconcile(snap) == ["ledger has observed no steps"]
+    led.observe_step(1, snap, StepPlanContext())
+    assert led.reconcile(snap) == []
+    wrong = dict(snap, block_table=np.array([[1, -1]]),
+                 ref_count=np.array([0, 1]))
+    errs = led.reconcile(wrong)
+    assert any("block_table" in e for e in errs)
+    assert any("ref_count" in e for e in errs)

@@ -102,7 +102,8 @@ def test_registry_snapshot_json_roundtrip(tmp_path):
 # ---------------------------------------------------------------------------
 
 def _event(step=1, **kw):
-    ev = {"v": TRACE_SCHEMA_VERSION, "step": step, "kind": "decode",
+    ev = {"v": TRACE_SCHEMA_VERSION, "rec": "step", "step": step,
+          "kind": "decode",
           "t_ms": 1.0, "plan_ms": 0.1, "step_ms": 0.9, "decode_rows": 2,
           "prefill_rows": 0, "reset_rows": 0, "adopt_rows": 0, "tokens": 2,
           "programs": 2, "finished": 0}

@@ -1,0 +1,230 @@
+"""Eviction-regret shadow probes (repro.obs.regret; DESIGN.md §10).
+
+The acceptance gates from the forensics PR:
+
+- ``paged_eviction`` under budget pressure shows NONZERO regret — per-layer
+  output divergence and shadow attention mass on evicted positions;
+- a ``full``-cache engine probes to ~zero on both (the shadow recompute is
+  the same attention math in f32);
+- probes OFF is python-static: the engine's outputs are bit-identical with
+  ``regret_every == 0`` vs any other obs configuration, and probes ON never
+  perturb the sampled tokens either (taps are read-only);
+- the probe records land on the v2 trace stream and per-request summaries
+  aggregate them.
+
+Plus unit coverage of the shadow-state lifecycle (reset / adopt / scatter
+writes) and the numpy GQA reference used for the counterfactual.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.models import init_model
+from repro.obs import ObsConfig
+from repro.obs.regret import (REGRET_BOUNDS, ShadowState, _full_attention,
+                              probe_record, regret_smoke, run_probe,
+                              summarize_request)
+from repro.obs.trace import validate_event
+from repro.serving import Engine, SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# shadow state + numpy attention units
+# ---------------------------------------------------------------------------
+
+def test_shadow_state_lifecycle():
+    sh = ShadowState(num_layers=2, batch=2, max_len=16, kv_heads=2,
+                     head_dim=4)
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(2, 3, 2, 4)).astype(np.float32)
+    layers = [{"k": k, "v": k + 1}, {"k": k * 2, "v": k - 1}]
+    pos = np.array([[0, 1, 2], [5, 6, -1]], np.int32)
+    sh.record_step(layers, pos, np.array([3, 2]))
+    assert sh.written[0, :3].all() and not sh.written[0, 3:].any()
+    assert sh.written[1, 5:7].all() and not sh.written[1, :5].any()
+    np.testing.assert_array_equal(sh.k[0, 0, :3], k[0])
+    np.testing.assert_array_equal(sh.k[1, 1, 5:7], 2 * k[1, :2])
+    # adoption copies the prefix history; reset clears the row
+    sh.adopt(1, 0, 3)
+    assert sh.written[1, :3].all()
+    np.testing.assert_array_equal(sh.v[1, 1, :3], (k - 1)[0])
+    sh.reset_row(0)
+    assert not sh.written[0].any()
+    assert sh.nbytes() > 0
+    # out-of-range positions are dropped, not wrapped
+    sh.record_step(layers, np.array([[99, -1, -1], [-1, -1, -1]], np.int32),
+                   np.array([1, 0]))
+    assert not sh.written[0].any()
+
+
+def test_full_attention_matches_manual_softmax():
+    rng = np.random.default_rng(1)
+    H, KV, hd, S = 4, 2, 8, 6
+    q = rng.normal(size=(H, hd)).astype(np.float32)
+    k = rng.normal(size=(S, KV, hd)).astype(np.float32)
+    v = rng.normal(size=(S, KV, hd)).astype(np.float32)
+    mask = np.array([True, True, False, True, True, True])
+    o, p = _full_attention(q, k, v, mask)
+    assert o.shape == (H, hd) and p.shape == (KV, H // KV, S)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-6)
+    assert (p[..., ~mask] == 0).all()
+    g = 0
+    s = (q.reshape(KV, H // KV, hd)[0, g] @ k[:, 0].T) / np.sqrt(hd)
+    s[~mask] = -np.inf
+    e = np.exp(s - s.max())
+    ref = (e / e.sum()) @ v[:, 0]
+    np.testing.assert_allclose(o.reshape(KV, H // KV, hd)[0, g], ref,
+                               atol=1e-5)
+
+
+def test_run_probe_zero_when_nothing_evicted():
+    """If the pruned path kept every position and computed the same
+    attention, divergence and evicted mass are both ~zero."""
+    rng = np.random.default_rng(2)
+    H = KV = 2
+    hd, S = 4, 5
+    sh = ShadowState(1, 1, 16, KV, hd)
+    k = rng.normal(size=(1, S, KV, hd)).astype(np.float32)
+    v = rng.normal(size=(1, S, KV, hd)).astype(np.float32)
+    q = rng.normal(size=(1, S, H, hd)).astype(np.float32)
+    pos = np.arange(S, dtype=np.int32)[None]
+    sh.record_step([{"k": k, "v": v}], pos, np.array([S]))
+    o, _ = _full_attention(q[0, -1], k[0], v[0], np.ones(S, bool))
+    tap = {"q": q, "o": np.zeros((1, S, H, hd), np.float32),
+           "live_pos": pos.copy()}
+    tap["o"][0, -1] = o       # only the last token's output is probed
+    out = run_probe(sh, [tap], pos, np.array([S]), rows=[0])
+    assert len(out) == 1
+    assert out[0]["tokens_evicted"] == 0
+    assert out[0]["divergence"][0] < 1e-6
+    assert out[0]["evicted_mass"][0] == 0.0
+    # now pretend the pruned cache dropped the first two positions
+    tap["live_pos"] = pos.copy()
+    tap["live_pos"][0, :2] = -1
+    out = run_probe(sh, [tap], pos, np.array([S]), rows=[0])
+    assert out[0]["tokens_evicted"] == 2
+    assert out[0]["evicted_mass"][0] > 0
+
+
+def test_probe_record_and_summary():
+    sample = {"slot": 1, "pos": 17, "divergence": [0.1, 0.2],
+              "evicted_mass": [0.05, 0.0], "tokens_evicted": 8}
+    rec = probe_record(sample, step=4, request_id=3)
+    assert validate_event(rec) == []
+    assert rec["rec"] == "probe" and rec["request_id"] == "3"
+    assert summarize_request([]) is None
+    summ = summarize_request([sample, dict(sample, divergence=[0.3, 0.4])])
+    assert summ["probes"] == 2
+    assert summ["max_divergence"] == pytest.approx(0.35)
+    assert summ["tokens_evicted_last"] == 8
+    assert list(REGRET_BOUNDS) == sorted(REGRET_BOUNDS)
+
+
+# ---------------------------------------------------------------------------
+# engine-level gates
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_pruned():
+    return regret_smoke("paged_eviction", budget=32)
+
+
+def test_paged_eviction_regret_nonzero(smoke_pruned):
+    s = smoke_pruned
+    assert s["probes"] > 0
+    assert s["mean_divergence"] > 1e-5
+    assert s["mean_evicted_mass"] > 1e-4
+    assert s["shadow_mb"] > 0
+
+
+def test_full_cache_regret_near_zero():
+    s = regret_smoke("full", budget=1024)
+    assert s["probes"] > 0
+    assert s["mean_divergence"] < 1e-3
+    assert s["mean_evicted_mass"] < 1e-6
+
+
+def _engine(obs, policy="paged_eviction", budget=32):
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=budget, policy=policy,
+                       dtype="float32")
+    return Engine(cfg, params, cache_cfg=ccfg, max_batch=3,
+                  max_prompt_len=48, max_new_tokens=6,
+                  sampling=SamplingParams(greedy=True), chunk_size=16,
+                  obs=obs)
+
+
+def _run_outputs(eng, seed=9):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, eng.cfg.vocab_size, size=24)
+    for _ in range(4):
+        tail = rng.integers(0, eng.cfg.vocab_size, size=12)
+        eng.submit(np.concatenate([prefix, tail]).astype(np.int32))
+    done = eng.run()
+    return [r.output_tokens for r in done], done
+
+
+def test_probes_do_not_perturb_outputs():
+    """Probes OFF must match the plain engine bit-for-bit (regret_every is
+    python-static — same compiled program), and probes ON are read-only
+    taps: the sampled tokens are identical either way."""
+    off, _ = _run_outputs(_engine(ObsConfig()))
+    off2, _ = _run_outputs(_engine(ObsConfig(regret_every=0)))
+    on, done = _run_outputs(_engine(ObsConfig(regret_every=2)))
+    assert off == off2 == on
+    assert any(r.regret_samples for r in done)
+
+
+def test_probes_off_program_has_no_taps():
+    """regret_every == 0 keeps the step jaxpr free of the tap outputs — the
+    probes-off program is the pre-forensics program, not a variant that
+    computes-and-discards."""
+    off = _engine(ObsConfig())
+    on = _engine(ObsConfig(regret_every=4))
+    B = off.max_batch
+    import jax.numpy as jnp
+    args = (off.params, jnp.zeros((B, 1), jnp.int32),
+            jnp.ones((B,), jnp.int32), jnp.ones((B,), bool),
+            jnp.zeros((B,), bool), jnp.zeros((B,), bool),
+            jnp.full((B,), -1, jnp.int32), jnp.zeros((B,), jnp.int32),
+            off.cache, jax.random.PRNGKey(0))
+    n_off = len(jax.eval_shape(off._step_impl, *args))
+    args_on = args[:8] + (on.cache, args[9])
+    out_on = jax.eval_shape(on._step_impl, *args_on)
+    assert n_off == len(out_on) == 4
+    assert jax.eval_shape(off._step_impl, *args)[3] is None
+    assert out_on[3] is not None
+
+
+def test_probe_records_on_trace_and_summaries(tmp_path):
+    trace = tmp_path / "t.jsonl"
+    eng = _engine(ObsConfig(regret_every=2, trace_path=str(trace)))
+    _, done = _run_outputs(eng)
+    eng.close()
+    recs = [json.loads(ln) for ln in trace.read_text().splitlines()]
+    probes = [r for r in recs if r.get("rec") == "probe"]
+    assert probes
+    for r in probes:
+        assert validate_event(r) == []
+        assert len(r["divergence"]) == len(r["evicted_mass"]) > 0
+    assert sum(len(r.regret_samples) for r in done) == len(probes)
+    summs = [r.regret_summary() for r in done]
+    assert any(s and s["probes"] > 0 for s in summs)
+    snap = eng.metrics_snapshot()
+    assert snap["engine.eviction_regret"]["count"] == len(probes)
+    assert snap["engine.evicted_attention_mass"]["count"] == len(probes)
+    # request.probe == False opts a request out of sampling
+    eng2 = _engine(ObsConfig(regret_every=2))
+    rng = np.random.default_rng(9)
+    reqs = []
+    for _ in range(3):
+        r = eng2.submit(rng.integers(0, eng2.cfg.vocab_size, size=24)
+                        .astype(np.int32))
+        r.probe = False
+        reqs.append(r)
+    eng2.run()
+    assert all(not r.regret_samples for r in reqs)

@@ -1,0 +1,148 @@
+"""Per-request timeline recorder + Perfetto export (repro.obs.timeline;
+DESIGN.md §10).
+
+- recorder unit: hook calls assemble into the expected span structure
+  (queue = submit → admit, indexed prefill chunks, one decode span,
+  instants), times rebased to the first observation
+- the exported document passes the structural Chrome-trace validation
+  (what chrome://tracing / ui.perfetto.dev need to load it) and the
+  validator itself rejects malformed documents
+- engine integration: a shared-prefix serve run with
+  ``ObsConfig(timeline=True)`` exports one engine-step span per real step,
+  one request track per submission, adopt_prefix instants on the sharing
+  followers, and eviction instants under budget pressure
+- ``export_timeline`` refuses when the engine ran without the recorder
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, CacheConfig
+from repro.models import init_model
+from repro.obs import ObsConfig, TimelineRecorder
+from repro.obs.timeline import validate_chrome_trace
+from repro.serving import Engine, SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# recorder unit
+# ---------------------------------------------------------------------------
+
+def test_recorder_span_structure():
+    tl = TimelineRecorder()
+    tl.request_submitted("r1", 10.0)
+    tl.request_admitted("r1", 10.5, slot=0, prompt_tokens=32)
+    tl.prefill_chunk("r1", 10.5, 10.6, tokens=16, step=1)
+    tl.prefill_chunk("r1", 10.6, 10.7, tokens=16, step=2)
+    tl.decode_step("r1", 10.7)
+    tl.decode_step("r1", 10.8)
+    tl.request_evicted_page("r1", 10.75, page=3, lpi=1, score=0.5)
+    tl.request_finished("r1", 10.9, tokens=2, reason="finished_length")
+    tl.engine_step(1, "prefill", 10.5, 0.1, tokens=16)
+    doc = tl.to_chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    ev = doc["traceEvents"]
+    by_name = {e["name"]: e for e in ev if e["ph"] in ("X", "i")}
+    # times rebased: first observation (submit at t=10.0) is ts 0
+    assert by_name["queue"]["ts"] == 0.0
+    assert by_name["queue"]["dur"] == pytest.approx(0.5e6)
+    assert by_name["prefill[0]"]["dur"] == pytest.approx(0.1e6, rel=1e-6)
+    assert by_name["prefill[1]"]["ts"] == pytest.approx(0.6e6, rel=1e-6)
+    dec = by_name["decode"]
+    assert dec["ts"] == pytest.approx(0.7e6, rel=1e-6)
+    assert dec["dur"] == pytest.approx(0.2e6, rel=1e-6)  # ends at finish
+    assert dec["args"]["decode_steps"] == 2
+    assert dec["args"]["reason"] == "finished_length"
+    assert by_name["evict_page"]["args"] == {"page": 3, "lpi": 1,
+                                             "score": 0.5}
+    assert by_name["step:prefill"]["pid"] == 1
+    # request events live on pid 2, one tid per request, with a thread name
+    names = [e for e in ev if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert any(m["args"]["name"] == "req r1" for m in names)
+
+
+def test_recorder_unadmitted_request_still_exports():
+    """A request that never left the queue (engine crashed / run truncated)
+    must not produce a malformed span."""
+    tl = TimelineRecorder()
+    tl.request_submitted("ghost", 1.0)
+    doc = tl.to_chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    assert not [e for e in doc["traceEvents"] if e["ph"] == "X"]
+
+
+def test_chrome_trace_validator_catches_bad_docs():
+    assert validate_chrome_trace({}) == ["missing traceEvents container"]
+    assert validate_chrome_trace({"traceEvents": 3}) \
+        == ["traceEvents is not a list"]
+    bad_ph = {"traceEvents": [{"ph": "Z", "name": "x", "pid": 1}]}
+    assert any("bad ph" in e for e in validate_chrome_trace(bad_ph))
+    no_dur = {"traceEvents": [{"ph": "X", "name": "x", "pid": 1, "ts": 0}]}
+    assert any("ts/dur" in e for e in validate_chrome_trace(no_dur))
+    neg = {"traceEvents": [{"ph": "X", "name": "x", "pid": 1, "ts": 0,
+                            "dur": -1}]}
+    assert any("ts/dur" in e for e in validate_chrome_trace(neg))
+    no_scope = {"traceEvents": [{"ph": "i", "name": "x", "pid": 1, "ts": 0}]}
+    assert any("scope" in e for e in validate_chrome_trace(no_scope))
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _engine(policy="paged_eviction", budget=32, obs=None, max_batch=3):
+    cfg = ASSIGNED_ARCHS["qwen2.5-3b"].reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    ccfg = CacheConfig(page_size=8, cache_budget=budget, policy=policy,
+                       dtype="float32")
+    return Engine(cfg, params, cache_cfg=ccfg, max_batch=max_batch,
+                  max_prompt_len=48, max_new_tokens=6,
+                  sampling=SamplingParams(greedy=True), chunk_size=16,
+                  obs=obs)
+
+
+def test_engine_timeline_export(tmp_path):
+    eng = _engine(obs=ObsConfig(timeline=True, lineage=True))
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, eng.cfg.vocab_size, size=24)
+    reqs = []
+    for _ in range(4):
+        tail = rng.integers(0, eng.cfg.vocab_size, size=12)
+        reqs.append(eng.submit(np.concatenate([prefix, tail])
+                               .astype(np.int32)))
+    eng.run()
+    out = tmp_path / "timeline.json"
+    n = eng.export_timeline(str(out))
+    doc = json.loads(out.read_text())
+    assert validate_chrome_trace(doc) == []
+    ev = doc["traceEvents"]
+    assert n == len(ev)
+    steps = [e for e in ev if e["ph"] == "X" and e["pid"] == 1]
+    assert len(steps) == eng.stats.steps
+    # one request track per submission, each with queue + decode spans
+    tids = {e["tid"] for e in ev if e.get("pid") == 2 and e["ph"] == "X"}
+    assert len(tids) == 4
+    for name in ("queue", "decode"):
+        assert sum(e["name"] == name for e in ev if e.get("pid") == 2) == 4
+    # the sharing followers carry the adoption instant
+    adopts = [e for e in ev if e["ph"] == "i" and e["name"] == "adopt_prefix"]
+    assert len(adopts) == eng.stats.shared_prefix_hits > 0
+    assert all(e["args"]["shared_tokens"] > 0 for e in adopts)
+    # budget pressure surfaced as eviction instants on both pids
+    assert any(e["name"] == "pages_evicted" for e in ev if e["pid"] == 1)
+    req_ev = [e for e in ev if e.get("pid") == 2
+              and e["name"] == "evict_page"]
+    assert req_ev and all("page" in e["args"] and "lpi" in e["args"]
+                          for e in req_ev)
+    # spans are consistent: every complete event fits in the run
+    t_end = max(e["ts"] + e.get("dur", 0) for e in ev if "ts" in e)
+    assert all(e["ts"] >= 0 for e in ev if "ts" in e)
+    assert t_end > 0
+
+
+def test_export_timeline_requires_recorder():
+    eng = _engine(obs=ObsConfig())
+    with pytest.raises(ValueError, match="timeline"):
+        eng.export_timeline("/tmp/never-written.json")
