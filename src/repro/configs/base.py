@@ -209,10 +209,16 @@ class ModelConfig:
         return total - moe_layers * unused
 
     # --------------------------------------------------------------- reduced
-    def reduced(self) -> "ModelConfig":
+    def reduced(self, tp: int = 1) -> "ModelConfig":
         """Tiny same-family variant for CPU smoke tests (spec: <=2-ish layers,
         d_model<=512, <=4 experts). Keeps one full pattern period when the
-        family is heterogeneous so the interleave is exercised."""
+        family is heterogeneous so the interleave is exercised.
+
+        ``tp``: make the reduced config servable at that tensor-parallel
+        degree — KV heads are rounded UP to a multiple of ``tp`` (preserving
+        the family's GQA ratio for the query heads), since TP shards whole
+        KV heads. TP∈{1,2,4} parity tests must use the SAME tp-capable
+        config at every degree."""
         num_layers = 2
         if self.attn_every or self.slstm_every or self.local_global_ratio:
             num_layers = min(self.pattern_period, 4)
@@ -222,6 +228,12 @@ class ModelConfig:
         # keep GQA ratio when possible
         if self.num_kv_heads < self.num_heads:
             kv = max(1, heads // self.q_per_kv)
+        if tp > 1:
+            kv = -(-kv // tp) * tp
+            # keep a GQA fold (G=2) when the family has one, but cap it so
+            # tp=4 configs stay CPU-smoke sized
+            ratio = 2 if self.num_kv_heads < self.num_heads else 1
+            heads = kv * ratio
         overrides = dict(
             num_layers=num_layers,
             d_model=d_model,

@@ -23,28 +23,39 @@ import jax.numpy as jnp
 _EPS = 1e-6
 
 
-def _norms(x):
-    """L2 norm over head_dim. x: (..., KV, hd) -> (...,) mean over KV heads."""
+def _norms(x, axis_name=None):
+    """L2 norm over head_dim. x: (..., KV, hd) -> (...,) mean over KV heads.
+
+    Under tensor parallelism the KV-head axis is sharded over ``axis_name``;
+    the local mean is then ``pmean``'d so every shard sees the GLOBAL
+    per-token mean and eviction decisions stay identical across TP degrees
+    (equal local head counts make mean-of-means exact).
+    """
     n = jnp.linalg.norm(x.astype(jnp.float32), axis=-1)   # (..., KV)
-    return jnp.mean(n, axis=-1)
+    m = jnp.mean(n, axis=-1)
+    if axis_name is not None:
+        m = jax.lax.pmean(m, axis_name)
+    return m
 
 
-def vk_ratio_score(k, v):
+def vk_ratio_score(k, v, axis_name=None):
     """Paper Alg.1 token importance: mean_h(||V||) / mean_h(||K||).
 
-    k, v: (..., KV, hd)  ->  (...,) f32.
+    k, v: (..., KV, hd)  ->  (...,) f32. The KV-head means are globalised
+    (pmean) BEFORE the nonlinear ratio so sharded and unsharded scores agree.
     """
-    return _norms(v) / jnp.maximum(_norms(k), _EPS)
+    return (_norms(v, axis_name)
+            / jnp.maximum(_norms(k, axis_name), _EPS))
 
 
-def inverse_key_l2_score(k, v=None):
+def inverse_key_l2_score(k, v=None, axis_name=None):
     """Devoto et al. 2024 baseline: evict tokens with *high* key L2 norm,
     i.e. importance = -||K||. (..., KV, hd) -> (...,)."""
     del v
-    return -_norms(k)
+    return -_norms(k, axis_name)
 
 
-def keydiff_score(k, key_mean):
+def keydiff_score(k, key_mean, axis_name=None):
     """KeyDiff (Park et al. 2025) baseline: evict tokens whose keys are most
     similar to the mean key direction (least diverse). importance =
     -cos(k_i, k_mean), averaged over KV heads.
@@ -56,7 +67,10 @@ def keydiff_score(k, key_mean):
     num = jnp.sum(kf * mf, axis=-1)
     den = jnp.maximum(jnp.linalg.norm(kf, axis=-1) * jnp.linalg.norm(mf, axis=-1), _EPS)
     cos = num / den                                        # (..., KV)
-    return -jnp.mean(cos, axis=-1)
+    m = -jnp.mean(cos, axis=-1)
+    if axis_name is not None:
+        m = jax.lax.pmean(m, axis_name)
+    return m
 
 
 def recency_score(positions):
@@ -64,7 +78,7 @@ def recency_score(positions):
     return positions.astype(jnp.float32)
 
 
-def page_scores_from_norms(kn, vn, pos_pages, mapped):
+def page_scores_from_norms(kn, vn, pos_pages, mapped, axis_name=None):
     """Paper Alg.1 page scores from the attention kernels' fused norm
     epilogue (DESIGN.md §8) — the free path for `block_score`.
 
@@ -76,8 +90,17 @@ def page_scores_from_norms(kn, vn, pos_pages, mapped):
     identical to running the standalone ``block_score`` pool pass and
     gathering through the block table — that pass survives as the parity
     oracle (tests/test_kernel_perf.py).
+
+    Under TP the kernels emit norms for LOCAL KV heads only; ``axis_name``
+    pmeans the head means before the ratio so the page scores every shard
+    feeds into the eviction argmin are the global ones.
     """
-    tok = jnp.mean(vn, axis=1) / jnp.maximum(jnp.mean(kn, axis=1), _EPS)
+    km = jnp.mean(kn, axis=1)
+    vm = jnp.mean(vn, axis=1)
+    if axis_name is not None:
+        km = jax.lax.pmean(km, axis_name)
+        vm = jax.lax.pmean(vm, axis_name)
+    tok = vm / jnp.maximum(km, _EPS)
     valid = (pos_pages >= 0) & mapped[:, :, None]           # (B, P, page)
     cnt = jnp.sum(valid, axis=-1)
     ssum = jnp.sum(jnp.where(valid, tok, 0.0), axis=-1)

@@ -144,6 +144,15 @@ class EvictionPolicy:
     name: str = "base"
     structured: bool = True
 
+    def __init__(self, tp_axis: str | None = None):
+        # Tensor parallelism (DESIGN.md §11): when the KV-head axis is
+        # sharded over a shard_map mesh axis, score reductions over KV
+        # heads must pmean across it so every shard ranks tokens/pages by
+        # the GLOBAL score and eviction picks identical victims. None (the
+        # registry singletons) keeps all reductions local — byte-identical
+        # to the pre-TP behaviour.
+        self.tp_axis = tp_axis
+
     # --- slab sizing --------------------------------------------------------
     def _round_slab(self, cfg: CacheConfig, pages: int) -> int:
         m = max(cfg.slab_multiple, 1)
@@ -225,12 +234,15 @@ class EvictionPolicy:
 
     # ------------------------------------------------------------------ misc
     def __hash__(self):
-        return hash(self.name)
+        return hash((self.name, self.tp_axis))
 
     def __eq__(self, other):
-        return type(self) is type(other)
+        return (type(self) is type(other)
+                and self.tp_axis == getattr(other, "tp_axis", None))
 
     def __repr__(self):
+        if self.tp_axis is not None:
+            return f"{type(self).__name__}(tp_axis={self.tp_axis!r})"
         return f"{type(self).__name__}()"
 
 
@@ -306,10 +318,10 @@ class PagedEviction(EvictionPolicy):
     structured = True
 
     def write_score(self, k_tok, v_tok, pos_tok):
-        return importance.vk_ratio_score(k_tok, v_tok)
+        return importance.vk_ratio_score(k_tok, v_tok, axis_name=self.tp_axis)
 
     def prefill_scores(self, k, v, positions):
-        return importance.vk_ratio_score(k, v)
+        return importance.vk_ratio_score(k, v, axis_name=self.tp_axis)
 
     def _chunk_evict_body(self, cache, cfg, active, window: int,
                           page_scores=None):
@@ -457,10 +469,10 @@ class InverseKeyL2(_UnstructuredTokenPolicy):
     name = "inverse_key_l2"
 
     def write_score(self, k_tok, v_tok, pos_tok):
-        return importance.inverse_key_l2_score(k_tok)
+        return importance.inverse_key_l2_score(k_tok, axis_name=self.tp_axis)
 
     def prefill_scores(self, k, v, positions):
-        return importance.inverse_key_l2_score(k)
+        return importance.inverse_key_l2_score(k, axis_name=self.tp_axis)
 
 
 class KeyDiff(_UnstructuredTokenPolicy):
@@ -473,15 +485,18 @@ class KeyDiff(_UnstructuredTokenPolicy):
 
     def prefill_scores(self, k, v, positions):
         mean = jnp.mean(k.astype(jnp.float32), axis=1, keepdims=True)
-        return importance.keydiff_score(k, mean)
+        return importance.keydiff_score(k, mean, axis_name=self.tp_axis)
 
     def _evict_scores(self, cache, cfg):
         valid = cache.valid_mask()                          # (B,P,page)
         kf = cache.k_view().astype(jnp.float32)
         w = valid[..., None, None].astype(jnp.float32)
+        # per-KV-head mean over tokens — shard-local under TP (each shard
+        # owns whole heads); only the final cos mean crosses heads
         mean = jnp.sum(kf * w, axis=(1, 2)) / jnp.maximum(
             jnp.sum(w, axis=(1, 2)), 1.0)                   # (B,KV,hd)
-        return importance.keydiff_score(kf, mean[:, None, None])
+        return importance.keydiff_score(kf, mean[:, None, None],
+                                        axis_name=self.tp_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -494,8 +509,14 @@ POLICIES: dict[str, EvictionPolicy] = {
 }
 
 
-def get_policy(name: str) -> EvictionPolicy:
+def get_policy(name: str, tp_axis: str | None = None) -> EvictionPolicy:
+    """Look up a policy. ``tp_axis`` (tensor-parallel serving only) returns
+    a fresh instance whose KV-head score reductions pmean over that mesh
+    axis; the default returns the shared local-reduction singleton."""
     try:
-        return POLICIES[name]
+        pol = POLICIES[name]
     except KeyError:
         raise KeyError(f"unknown policy {name!r}; available: {sorted(POLICIES)}") from None
+    if tp_axis is None:
+        return pol
+    return type(pol)(tp_axis=tp_axis)

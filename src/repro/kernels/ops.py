@@ -33,17 +33,19 @@ def _pool_layout(arr):
     return jnp.moveaxis(arr, 2, 0)
 
 
-def _epilogue_scores(cache: PagedLayerCache, norms):
+def _epilogue_scores(cache: PagedLayerCache, norms, tp_axis=None):
     """(kn, vn) epilogue outputs (B, KV, P, page) -> Alg.1 page scores
-    (B, P); identical to the standalone block_score pass (the oracle)."""
+    (B, P); identical to the standalone block_score pass (the oracle).
+    Under TP the kernel only saw the LOCAL KV heads; ``tp_axis`` pmeans
+    the head means across the mesh so every shard scores globally."""
     kn, vn = norms
     return page_scores_from_norms(kn, vn, cache.pos_view(),
-                                  cache.mapped_mask())
+                                  cache.mapped_mask(), axis_name=tp_axis)
 
 
 def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
                     scale: float | None = None, num_splits: int = 1,
-                    return_scores: bool = False):
+                    return_scores: bool = False, tp_axis: str | None = None):
     """Decode attention over a pooled paged cache via the Pallas kernel.
 
     q: (B, H, hd) current-token queries -> (B, H, hd), or
@@ -77,13 +79,14 @@ def paged_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
             num_splits=num_splits, return_scores=return_scores)
     if return_scores:
         out, norms = res
-        return out.reshape(B, H, hd), _epilogue_scores(cache, norms)
+        return out.reshape(B, H, hd), _epilogue_scores(cache, norms, tp_axis)
     return res.reshape(B, H, hd)
 
 
 def paged_prefill_attention(q, cache: PagedLayerCache, *, q_pos,
                             window: int = 0, scale: float | None = None,
-                            return_scores: bool = False):
+                            return_scores: bool = False,
+                            tp_axis: str | None = None):
     """Chunked-prefill attention over a pooled paged cache via the Pallas
     paged flash-prefill kernel (the unified-step hot path, G-fold fetch).
 
@@ -104,7 +107,7 @@ def paged_prefill_attention(q, cache: PagedLayerCache, *, q_pos,
         return_scores=return_scores)
     if return_scores:
         out, norms = res
-        return out, _epilogue_scores(cache, norms)
+        return out, _epilogue_scores(cache, norms, tp_axis)
     return res
 
 

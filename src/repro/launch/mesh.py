@@ -35,6 +35,24 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_tp_mesh(tp: int):
+    """Serving tensor-parallel mesh: (1, tp) with axes ("data", "model").
+
+    The size-1 data axis is kept (rather than a model-only mesh) so every
+    sharding helper that asks for batch axes keeps resolving; the engine's
+    shard_map runs manual over both axes (DESIGN.md §11). Requires at
+    least ``tp`` visible devices — CPU CI forces 4 via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before the
+    first jax import."""
+    ndev = len(jax.devices())
+    if ndev < tp:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices, found {ndev} (on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} before "
+            f"importing jax)")
+    return jax.make_mesh((1, tp), ("data", "model"))
+
+
 # --- hardware constants (TPU v5e; roofline denominators) --------------------
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -62,6 +62,12 @@ def main() -> None:
                          "(0 = off; emits v2 'probe' records into --trace)")
     ap.add_argument("--snapshot", default=None, metavar="FILE",
                     help="write the final metrics snapshot (JSON) here")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel degree: serve the unified step "
+                         "shard_map'd over an N-device (1, N) mesh — KV-head-"
+                         "sharded pool/kernels, replicated scheduler "
+                         "(DESIGN.md §11). On CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     ap.add_argument("--no-metrics", action="store_true",
                     help="disable all engine instrumentation (the bare "
                          "baseline the BENCH_obs overhead gate compares to)")
@@ -71,7 +77,7 @@ def main() -> None:
 
     cfg = get_arch(args.arch)
     if args.reduced:
-        cfg = cfg.reduced()
+        cfg = cfg.reduced(tp=args.tp)
     if cfg.num_codebooks > 1:
         raise SystemExit("serve driver targets text archs; see examples/ for "
                          "audio decode")
@@ -89,7 +95,8 @@ def main() -> None:
                  max_new_tokens=args.new_tokens,
                  sampling=SamplingParams(greedy=args.greedy),
                  chunk_size=args.chunk, token_budget=args.token_budget,
-                 prefix_sharing=not args.no_prefix_sharing, obs=obs)
+                 prefix_sharing=not args.no_prefix_sharing, obs=obs,
+                 tp=args.tp)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size,
@@ -107,6 +114,11 @@ def main() -> None:
           f"in {dt:.1f}s ({s.tokens_generated/dt:.1f} tok/s incl. compile)")
     print(f"decode-only throughput: {s.decode_tok_per_s:.1f} tok/s; "
           f"steps={s.steps}; programs={eng.num_compiled_programs()}")
+    if args.tp > 1:
+        pb = eng.pool_bytes()
+        print(f"tp={args.tp}: pool payload {pb['payload_total'] / 1e6:.2f} MB"
+              f" total, {pb['per_device_max'] / 1e6:.2f} MB max/device "
+              f"across {pb['devices']} devices")
     if s.shared_prefix_hits:
         print(f"prefix sharing: {s.shared_prefix_hits} adoptions, "
               f"{s.shared_prefix_tokens} prompt tokens skipped; "

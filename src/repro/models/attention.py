@@ -63,15 +63,20 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False):
 # ---------------------------------------------------------------------------
 
 def project_qkv(params, cfg: ModelConfig, x, positions, rope: bool = True):
-    """x: (B, S, D) -> q (B,S,H,hd), k, v (B,S,KV,hd). RoPE + qk-norm applied."""
+    """x: (B, S, D) -> q (B,S,H,hd), k, v (B,S,KV,hd). RoPE + qk-norm applied.
+
+    Head counts come from the projection widths, not the config: under
+    tensor parallelism (shard_map manual region) wq/wk/wv are column
+    shards holding H/tp and KV/tp heads, and the reshape must follow the
+    LOCAL width. At TP=1 the two are identical."""
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
-    H, KV = cfg.num_heads, cfg.num_kv_heads
     q = x @ params["wq"]
     k = x @ params["wk"]
     v = x @ params["wv"]
     if "bq" in params:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    H, KV = q.shape[-1] // hd, k.shape[-1] // hd
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, KV, hd)
     v = v.reshape(B, S, KV, hd)
@@ -212,18 +217,22 @@ def paged_attention_chunk_ref(q, cache: PagedLayerCache, *, q_pos,
 
 def decode_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
                      use_pallas: bool = False, num_splits: int = 1,
-                     want_scores: bool = False):
+                     want_scores: bool = False, tp_axis: str | None = None):
     """Single-token attention dispatch: Pallas split-K decode kernel or the
     pure-jnp oracle. q: (B, H, hd). Returns ``(o, page_scores)`` where
     page_scores is the fused eviction-score epilogue (B, P) when
     ``want_scores`` and the kernel ran, else None (callers fall back to the
     stored-score path). ``num_splits`` partitions the page walk
-    (DESIGN.md §8); the oracle ignores it (math is split-invariant)."""
+    (DESIGN.md §8); the oracle ignores it (math is split-invariant).
+    ``tp_axis``: mesh axis the KV heads are sharded over — the fused score
+    epilogue pmeans its per-head norms across it (attention itself needs no
+    collective: each query group attends only its own local KV heads)."""
     if use_pallas:
         from repro.kernels.ops import paged_attention
         if want_scores:
             return paged_attention(q, cache, cur_pos=cur_pos, window=window,
-                                   num_splits=num_splits, return_scores=True)
+                                   num_splits=num_splits, return_scores=True,
+                                   tp_axis=tp_axis)
         return paged_attention(q, cache, cur_pos=cur_pos, window=window,
                                num_splits=num_splits), None
     return paged_attention_ref(q, cache, cur_pos=cur_pos, window=window), None
@@ -231,7 +240,7 @@ def decode_attention(q, cache: PagedLayerCache, *, cur_pos, window: int = 0,
 
 def step_attention(q, cache: PagedLayerCache, *, q_pos, window: int = 0,
                    use_pallas: bool = False, decode_splits: int = 1,
-                   want_scores: bool = False):
+                   want_scores: bool = False, tp_axis: str | None = None):
     """Unified-step attention dispatch (the hot-path switch that used to
     live inline in ``transformer._step_layer``). q: (B, T, H, hd), q_pos:
     (B, T). T == 1 routes to the split-K decode kernel — one query row
@@ -244,13 +253,14 @@ def step_attention(q, cache: PagedLayerCache, *, q_pos, window: int = 0,
         o, ps = decode_attention(q[:, 0], cache, cur_pos=q_pos[:, 0],
                                  window=window, use_pallas=True,
                                  num_splits=decode_splits,
-                                 want_scores=want_scores)
+                                 want_scores=want_scores, tp_axis=tp_axis)
         return o[:, None], ps
     if use_pallas:
         from repro.kernels.ops import paged_prefill_attention
         if want_scores:
             return paged_prefill_attention(q, cache, q_pos=q_pos,
-                                           window=window, return_scores=True)
+                                           window=window, return_scores=True,
+                                           tp_axis=tp_axis)
         return paged_prefill_attention(q, cache, q_pos=q_pos,
                                        window=window), None
     return paged_attention_chunk_ref(q, cache, q_pos=q_pos,
@@ -258,15 +268,18 @@ def step_attention(q, cache: PagedLayerCache, *, q_pos, window: int = 0,
 
 
 def decode_project_qkv(params, cfg: ModelConfig, x, cur_pos):
-    """x: (B, D) single token -> q (B,H,hd), k, v (B,KV,hd), RoPE at cur_pos."""
+    """x: (B, D) single token -> q (B,H,hd), k, v (B,KV,hd), RoPE at cur_pos.
+
+    Head counts derive from the projection widths (shard-local under TP,
+    matching :func:`project_qkv`)."""
     B, D = x.shape
     hd = cfg.resolved_head_dim
-    H, KV = cfg.num_heads, cfg.num_kv_heads
     q = x @ params["wq"]
     k = x @ params["wk"]
     v = x @ params["wv"]
     if "bq" in params:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    H, KV = q.shape[-1] // hd, k.shape[-1] // hd
     q = q.reshape(B, H, hd)
     k = k.reshape(B, KV, hd)
     v = v.reshape(B, KV, hd)

@@ -18,7 +18,13 @@ def init_mlp(key, cfg: ModelConfig):
     }
 
 
-def mlp_forward(params, cfg: ModelConfig, x):
+def mlp_forward(params, cfg: ModelConfig, x, tp_axis=None):
+    """Gated MLP. Under tensor parallelism ``d_ff`` is sharded over
+    ``tp_axis`` (w_gate/w_up column-parallel, w_down row-parallel); the
+    partial output is psum'd so every shard holds the full activation."""
     act = activation(cfg.act)
     h = act(x @ params["w_gate"]) * (x @ params["w_up"])
-    return h @ params["w_down"]
+    out = h @ params["w_down"]
+    if tp_axis is not None:
+        out = jax.lax.psum(out, tp_axis)
+    return out

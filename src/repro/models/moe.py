@@ -285,10 +285,15 @@ def moe_forward(params, cfg: ModelConfig, x, capacity: int | None = None,
     return out, MoEStats(load, dropped, aux)
 
 
-def moe_forward_decode(params, cfg: ModelConfig, x):
+def moe_forward_decode(params, cfg: ModelConfig, x, tp_axis=None):
     """Single-token MoE (B, D): dense all-expert combine — for decode
     batches every expert's weights are read anyway (memory-bound), and the
-    gather/scatter latency is avoided."""
+    gather/scatter latency is avoided.
+
+    Under tensor parallelism every expert's d_ff is sharded over ``tp_axis``
+    (w_gate/w_up on F, w_down's F contraction); the router runs on the
+    replicated input in f32 so routing/gates are identical on every shard,
+    and the partial expert outputs are psum'd before the gate combine."""
     B, D = x.shape
     E, K = cfg.num_experts, cfg.num_experts_per_tok
     logits = x.astype(jnp.float32) @ params["router"]
@@ -302,5 +307,7 @@ def moe_forward_decode(params, cfg: ModelConfig, x):
     h = act(jnp.einsum("bd,edf->ebf", x, params["w_gate"])) * \
         jnp.einsum("bd,edf->ebf", x, params["w_up"])
     eout = jnp.einsum("ebf,efd->ebd", h, params["w_down"])       # (E, B, D)
+    if tp_axis is not None:
+        eout = jax.lax.psum(eout.astype(jnp.float32), tp_axis)
     out = jnp.einsum("ebd,be->bd", eout.astype(jnp.float32), gate)
     return out.astype(x.dtype)

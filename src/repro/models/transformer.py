@@ -367,7 +367,8 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
                 policy: EvictionPolicy, ccfg: CacheConfig, decode_mask,
                 prefill_mask, reset_mask, share_src, share_pages,
                 use_pallas: bool = False, decode_splits: int = 1,
-                fused_scores: bool = False, want_taps: bool = False):
+                fused_scores: bool = False, want_taps: bool = False,
+                tp_axis: str | None = None):
     """One layer of the unified step. x: (B, T, D); positions: (B, T) int32
     with -1 past each row's ``n_tok``. Returns (x, LayerCaches, tap).
 
@@ -375,7 +376,13 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
     layers also return a tap dict — the k/v written this step, the q used,
     the attention output pre-projection, and the cache's live positions AT
     ATTENTION TIME (post-append, pre-eviction). False (the default) returns
-    ``tap = None`` and traces HLO identical to the pre-taps code."""
+    ``tap = None`` and traces HLO identical to the pre-taps code.
+
+    ``tp_axis`` (DESIGN.md §11): mesh axis name when the layer runs inside
+    a tensor-parallel shard_map region — heads/KV-heads/d_ff arrive as
+    local shards; attention and MLP/MoE outputs are psum'd here so the
+    residual stream stays replicated. None (default) is the single-device
+    path, traced identically to before."""
     B, T, _ = x.shape
     tap = None
     h = apply_norm(lp["norm1"], x)
@@ -400,7 +407,7 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
         o, pscores = attn_mod.step_attention(
             q, kvc, q_pos=positions, window=window, use_pallas=use_pallas,
             decode_splits=decode_splits,
-            want_scores=fused_scores and use_pallas)
+            want_scores=fused_scores and use_pallas, tp_axis=tp_axis)
         if want_taps:
             tap = {"k": k, "v": v, "q": q, "o": o,
                    "live_pos": kvc.pos_view()}
@@ -413,7 +420,10 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
                                 page_scores=pscores).cache
         kvc = policy.chunk_prefill_evict(kvc, ccfg, active=prefill_mask,
                                          window=window, page_scores=pscores)
-        x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"]
+        o2 = o.reshape(B, T, -1) @ lp["attn"]["wo"]
+        if tp_axis is not None:
+            o2 = jax.lax.psum(o2, tp_axis)
+        x = x + o2
         if cache.xattn is not None:
             hx = apply_norm(lp["norm_x"], x)
             x = x + attn_mod.cross_attention_forward(lp["xattn"], cfg, hx,
@@ -447,12 +457,13 @@ def _step_layer(lp, cfg, spec, x, cache: LayerCaches, positions, n_tok,
         cache = cache._replace(slstm=st)
     if spec.mlp == "dense":
         h2 = apply_norm(lp["norm2"], x)
-        x = x + mlp_forward(lp["mlp"], cfg, h2)
+        x = x + mlp_forward(lp["mlp"], cfg, h2, tp_axis=tp_axis)
     elif spec.mlp == "moe":
         # per-token dense-combine MoE: padding tokens cannot steal expert
         # capacity from live ones, so results are chunking-invariant
         h2 = apply_norm(lp["norm2"], x)
-        mo = moe_forward_decode(lp["moe"], cfg, h2.reshape(B * T, -1))
+        mo = moe_forward_decode(lp["moe"], cfg, h2.reshape(B * T, -1),
+                                tp_axis=tp_axis)
         x = x + mo.reshape(B, T, -1)
     return x, cache, tap
 
@@ -462,7 +473,8 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                  prefill_mask=None, reset_mask=None, share_src=None,
                  share_pages=None, ac: Callable = Identity,
                  use_pallas: bool = False, decode_splits: int = 1,
-                 fused_scores: bool = False, want_taps: bool = False):
+                 fused_scores: bool = False, want_taps: bool = False,
+                 tp_axis: str | None = None):
     """Unified mixed-batch step: up to T tokens per request in ONE program.
 
     tokens      : (B, T) int32 — row b's live tokens are tokens[b, :n_tok[b]]
@@ -497,6 +509,13 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                   layer taps {"k","v","q","o","live_pos"} — pattern-slot
                   taps stacked over reps — plus the step's ``positions``.
                   False leaves returns AND traced HLO unchanged.
+    tp_axis     : static (DESIGN.md §11): mesh axis name when this step is
+                  traced inside a tensor-parallel shard_map region. The
+                  caller must pass weight/pool shards consistent with
+                  ``sharding.rules.tp_*_specs`` and a policy built with
+                  ``get_policy(name, tp_axis=...)``; layer outputs psum
+                  over the axis so the residual stream (and hence logits
+                  and sampling) is replicated on every shard.
 
     Returns (logits (B, vocab) at each row's last live token, cache), plus
     the taps dict when ``want_taps``. Rows with n_tok == 0 return logits of
@@ -531,7 +550,7 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                                    ccfg, decode_mask, prefill_mask,
                                    reset_mask, share_src, share_pages,
                                    use_pallas, decode_splits, fused_scores,
-                                   want_taps)
+                                   want_taps, tp_axis)
             new_caches.append(c)
             slot_taps.append(tp)
         if want_taps:
@@ -554,7 +573,7 @@ def forward_step(params, cfg: ModelConfig, tokens, n_tok, cache: ModelCache,
                                positions, n_tok, policy, ccfg, decode_mask,
                                prefill_mask, reset_mask, share_src,
                                share_pages, use_pallas, decode_splits,
-                               fused_scores, want_taps)
+                               fused_scores, want_taps, tp_axis)
         tail_caches.append(c)
         tail_taps.append(tp)
     last = jnp.maximum(n_tok - 1, 0)

@@ -97,11 +97,22 @@ class Engine:
                  chunk_size: int = 64, token_budget: int | None = None,
                  prefix_sharing: bool = True, decode_splits: int = 1,
                  fused_scores: bool | None = None,
-                 obs: ObsConfig | None = None):
+                 obs: ObsConfig | None = None, tp: int = 1, mesh=None):
         self.cfg = cfg
         self.params = params
         self.ccfg = cache_cfg
-        self.policy: EvictionPolicy = get_policy(cache_cfg.policy)
+        # tensor parallelism (DESIGN.md §11): tp > 1 serves the unified step
+        # shard_map'd over a (1, tp) device mesh — KV-head-sharded pool and
+        # kernels, replicated metadata/scheduler. tp == 1 is the unchanged
+        # single-device path (no mesh, no shard_map, bit-identical HLO).
+        self.tp = tp
+        self._tp_axis = "model" if tp > 1 else None
+        if tp > 1:
+            from repro.sharding import rules as _rules
+            _rules.validate_tp(cfg, tp)
+        self.mesh = mesh
+        self.policy: EvictionPolicy = get_policy(cache_cfg.policy,
+                                                 tp_axis=self._tp_axis)
         self.max_batch = max_batch
         self.max_prompt_len = max_prompt_len
         self.max_new_tokens = max_new_tokens
@@ -141,6 +152,10 @@ class Engine:
         # snapshot function, and the regret shadow cache. ``_want_taps`` is
         # python-static — False compiles the exact pre-forensics program.
         self._want_taps = self.obs.cfg.regret_every > 0
+        if self._want_taps and tp > 1:
+            raise ValueError("regret shadow probes are not supported under "
+                             "tensor parallelism (tp > 1): the tap pytree "
+                             "would need per-shard out_specs; probe at tp=1")
         self._shadow: ShadowState | None = None
         if self.obs.timeline is not None:
             self.scheduler.on_admit = self._on_admit
@@ -167,13 +182,47 @@ class Engine:
         self._pool_pages_total = total
         self._free_pages_est = free
 
-        self._step_fn = jax.jit(self._step_impl)
+        if tp > 1:
+            self._init_tp()
+        else:
+            self._step_fn = jax.jit(self._step_impl)
         self._probe_fn = jax.jit(intact_prefix_pages)
         # lineage ledger: one jitted gather of the FIRST attention layer's
         # pool view per step (block table, ref counts, per-page tokens /
         # base positions / policy scores)
         self._lineage_fn = (jax.jit(self._lineage_impl)
                             if self.obs.ledger is not None else None)
+
+    def _init_tp(self) -> None:
+        """Build the tensor-parallel step: place params/cache with their
+        manual shardings and wrap ``_step_impl`` in shard_map over the
+        (1, tp) mesh (DESIGN.md §11). Everything host-side — the scheduler,
+        radix prefix index, free-list estimate, lineage ledger — keeps
+        reading the replicated metadata leaves exactly as at tp=1."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import make_tp_mesh
+        from repro.models.moe import _shard_map
+        from repro.sharding import rules
+
+        if self.mesh is None:
+            self.mesh = make_tp_mesh(self.tp)
+        mesh = self.mesh
+        p_specs = rules.tp_param_specs(self.params)
+        c_specs = rules.tp_cache_specs(self.cache)
+        self.params = jax.device_put(
+            self.params, rules.tp_param_shardings(mesh, self.params))
+        self.cache = jax.device_put(
+            self.cache, rules.tp_cache_shardings(mesh, self.cache))
+        rep = P()
+        in_specs = (p_specs, rep, rep, rep, rep, rep, rep, rep, c_specs, rep)
+        # outputs: (next_tok replicated, cache, stats replicated-or-None,
+        # taps always None under TP — gated in __init__)
+        stats_spec = rep if self.obs.cfg.metrics else None
+        out_specs = (rep, c_specs, stats_spec, None)
+        self._step_fn = jax.jit(_shard_map(
+            self._step_impl, mesh, in_specs=in_specs, out_specs=out_specs,
+            manual_axes=("data", "model")))
 
     @staticmethod
     def _lineage_impl(cache: ModelCache):
@@ -210,13 +259,22 @@ class Engine:
             reset_mask=reset_mask, share_src=share_src,
             share_pages=share_pages, use_pallas=self.use_pallas,
             decode_splits=self.decode_splits, fused_scores=self.fused_scores,
-            want_taps=self._want_taps)
+            want_taps=self._want_taps, tp_axis=self._tp_axis)
         logits, cache = out[0], out[1]
         taps = out[2] if self._want_taps else None
         s = self.sampling
         next_tok = sample_tokens(key, logits, temperature=s.temperature,
                                  top_k=s.top_k, top_p=s.top_p, greedy=s.greedy)
-        return next_tok, cache, collect_step_stats(cache), taps
+        st = collect_step_stats(cache)
+        if st is not None and self._tp_axis is not None:
+            # sharding-aware devstats: metadata mutations run replicated on
+            # every shard, so a plain sum over the mesh would count each
+            # pool event tp times and break PR 8's conservation identities.
+            # Keep shard 0's vector and psum — a true mesh collective whose
+            # result still reconciles EXACTLY with host pool accounting.
+            idx = jax.lax.axis_index(self._tp_axis)
+            st = jax.lax.psum(jnp.where(idx == 0, st, 0), self._tp_axis)
+        return next_tok, cache, st, taps
 
     def _prefix_probe(self, slot: int) -> int:
         """Device half of prefix-sharing admission (scheduler callback):
@@ -589,3 +647,32 @@ class Engine:
         return {"pool_pages": total, "free_pages": free,
                 "utilization": (total - free) / total if total else 0.0,
                 "shared_pages": shared, "pages_saved_by_sharing": extra}
+
+    def pool_bytes(self) -> dict:
+        """HBM accounting for the page-pool PAYLOAD (K/V tensors + int8
+        scales — the bytes that scale with budget, and the bytes TP divides;
+        pool metadata is replicated by design and reported separately).
+        ``per_device_max`` is measured from the real array shards, so the
+        benchmark gate ``per_device_max <= total/tp + page`` checks what the
+        runtime actually holds, not what the specs promise."""
+        total = meta = 0
+        per_dev: dict[int, int] = {}
+        for lc in list(self.cache.pattern) + list(self.cache.tail):
+            if lc.kv is None:
+                continue
+            kv = lc.kv
+            for leaf in (kv.k, kv.v, kv.k_scale, kv.v_scale):
+                if leaf is None:
+                    continue
+                total += leaf.nbytes
+                for sh in leaf.addressable_shards:
+                    d = sh.device.id
+                    per_dev[d] = per_dev.get(d, 0) + sh.data.nbytes
+            for leaf in (kv.pos, kv.score, kv.block_table, kv.ref_count,
+                         kv.cur_page, kv.cur_off, kv.stats):
+                if leaf is not None:
+                    meta += leaf.nbytes
+        return {"payload_total": total,
+                "per_device_max": max(per_dev.values()) if per_dev else 0,
+                "metadata_total": meta,
+                "devices": len(per_dev)}

@@ -396,3 +396,124 @@ def pin_inner(ac):
 
 def pin_time(ac):
     return getattr(ac, "time", None) or (lambda x: x)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving (shard_map manual specs — DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# Unlike the GSPMD rules above (hints the compiler may override), these are
+# the MANUAL partition specs for the serving engine's shard_map'd unified
+# step: they are exact contracts — every leaf is either sharded over the
+# "model" axis on a named dimension or fully replicated. The deliberate
+# differences from ``_param_spec``:
+#   * embed / lm_head are REPLICATED (not vocab-sharded): logits are
+#     computed whole on every shard so sampling needs no vocab gather, and
+#     the replicated PRNG key then samples the identical token everywhere.
+#   * every piece of pool METADATA (pos, score, block_table, ref_count,
+#     cur_page, cur_off, stats) is replicated, so each shard runs the full
+#     allocator/eviction logic and stays bit-identical — only the K/V pool
+#     payload (and its int8 scales) splits, over the KV-head dim.
+
+TP_AXIS = "model"
+
+
+def _tp_stacked_spec(path: str, shape: tuple):
+    """Common prelude: (off, spec) honouring the stacked-pattern leading
+    repetition dim that pattern-slot leaves carry."""
+    off = 1 if path.startswith("pattern/") else 0
+
+    def spec(*dims):
+        full = (None,) * off + dims
+        full = full + (None,) * (len(shape) - len(full))
+        return P(*full)
+
+    return off, spec
+
+
+def _tp_param_spec(path: str, shape: tuple) -> P:
+    name = path.rsplit("/", 1)[-1]
+    off, spec = _tp_stacked_spec(path, shape)
+    if name in ("wq", "wk", "wv"):
+        return spec(None, TP_AXIS)             # column-parallel (head shards)
+    if name in ("bq", "bk", "bv"):
+        return spec(TP_AXIS)                   # (H*hd,)/(KV*hd,) follow wq/wk
+    if name == "wo":
+        return spec(TP_AXIS, None)             # row-parallel -> psum
+    if name in ("w_gate", "w_up"):
+        if len(shape) - off == 3:              # MoE (E, D, F)
+            return spec(None, None, TP_AXIS)
+        return spec(None, TP_AXIS)             # dense (D, F)
+    if name == "w_down":
+        if len(shape) - off == 3:              # MoE (E, F, D)
+            return spec(None, TP_AXIS, None)
+        return spec(TP_AXIS, None)             # dense (F, D) -> psum
+    # embed, lm_head, norms, q_norm/k_norm, router: replicated
+    return P()
+
+
+def _tp_cache_spec(path: str, shape: tuple) -> P:
+    name = path.rsplit("/", 1)[-1]
+    off, spec = _tp_stacked_spec(path, shape)
+    rest = shape[off:]
+    if name in ("k", "v") and len(rest) == 4 and "xattn" not in path:
+        return spec(None, None, TP_AXIS, None)  # pool (N, page, KV, hd)
+    if name in ("k_scale", "v_scale") and len(rest) == 3:
+        return spec(None, None, TP_AXIS)        # (N, page, KV)
+    return P()                                  # metadata: replicated
+
+
+def tp_param_specs(params) -> Any:
+    """PartitionSpec pytree for the serving params under TP shard_map."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _tp_param_spec(_path_str(path), tuple(leaf.shape)),
+        params)
+
+
+def tp_cache_specs(cache) -> Any:
+    """PartitionSpec pytree for a ModelCache under TP shard_map."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _tp_cache_spec(_path_str(path), tuple(leaf.shape)),
+        cache)
+
+
+def tp_param_shardings(mesh: Mesh, params) -> Any:
+    """NamedSharding pytree (device_put placement) matching tp_param_specs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _tp_param_spec(_path_str(path), tuple(leaf.shape))),
+        params)
+
+
+def tp_cache_shardings(mesh: Mesh, cache) -> Any:
+    """NamedSharding pytree (device_put placement) matching tp_cache_specs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _tp_cache_spec(_path_str(path), tuple(leaf.shape))),
+        cache)
+
+
+def validate_tp(cfg, tp: int) -> None:
+    """Raise unless the config can shard whole heads/experts at degree
+    ``tp``. Reduced configs can be widened with ``cfg.reduced(tp=tp)``."""
+    if tp <= 1:
+        return
+    problems = []
+    if cfg.num_heads % tp:
+        problems.append(f"num_heads={cfg.num_heads}")
+    if cfg.num_kv_heads % tp:
+        problems.append(f"num_kv_heads={cfg.num_kv_heads}")
+    if cfg.d_ff and cfg.d_ff % tp:
+        problems.append(f"d_ff={cfg.d_ff}")
+    if problems:
+        raise ValueError(
+            f"{cfg.name}: {', '.join(problems)} not divisible by tp={tp}; "
+            f"TP shards whole KV heads and d_ff columns (use "
+            f"cfg.reduced(tp={tp}) for smoke configs)")
+    for spec in cfg.layer_specs():
+        if spec.mixer != "attn":
+            raise ValueError(
+                f"{cfg.name}: TP serving only supports attention mixers "
+                f"(got {spec.mixer!r}; recurrent state has no KV-head axis)")
+    if cfg.cross_attention:
+        raise ValueError(f"{cfg.name}: TP serving does not support "
+                         "cross-attention caches yet")
